@@ -1,0 +1,67 @@
+"""Render dryrun_results.json as the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [results.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def render(results: dict, mesh_filter: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | peak GiB/dev | compute s | memory s | collective s"
+        " | dominant | MODEL/HLO flops | roofline frac | mem frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh_filter:
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r['error'][:60]} | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_bytes(r['memory']['peak_bytes_per_device'])} | "
+            f"{rl['compute_s']:.4f} | {rl['memory_s']:.4f} | "
+            f"{rl['collective_s']:.4f} | {rl['dominant'].replace('_s','')} | "
+            f"{rl['useful_flop_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {rl['memory_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def render_multipod_check(results: dict) -> str:
+    lines = ["| arch | shape | 16x16 | 2x16x16 |", "|---|---|---|---|"]
+    seen = {}
+    for key, r in results.items():
+        seen.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = \
+            "ERROR" if "error" in r else "ok"
+    for (a, s), m in sorted(seen.items()):
+        lines.append(f"| {a} | {s} | {m.get('16x16', '-')} | "
+                     f"{m.get('2x16x16', '-')} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Single-pod (16x16 = 256 chips) roofline\n")
+    print(render(results, "16x16"))
+    print("\n## Multi-pod (2x16x16 = 512 chips) roofline\n")
+    print(render(results, "2x16x16"))
+    print("\n## Compile status matrix\n")
+    print(render_multipod_check(results))
+
+
+if __name__ == "__main__":
+    main()

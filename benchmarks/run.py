@@ -1,0 +1,222 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  table3  — dataset work statistics            (paper Table III)
+  fig8    — SpGEMM speedups over scl-hash      (paper Figure 8)
+  fig9    — spz execution-time breakdown       (paper Figure 9)
+  fig10   — chunk-traffic: esc vs spz          (paper Figure 10 analogue)
+  fig11   — dynamic mssort/mszip counts        (paper Figure 11)
+  table4  — area table + TPU overhead model    (paper Table IV analogue)
+  moe     — zipper MoE dispatch microbenchmark (framework integration)
+  kernels — stream sort/merge kernel timings   (per-kernel perf)
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
+Run everything: PYTHONPATH=src python -m benchmarks.run
+Subset:         PYTHONPATH=src python -m benchmarks.run fig8 fig11 --fast
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import datasets
+from repro.core import spgemm as sg
+
+
+def _time_call(fn, repeat=1):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _emit(name, seconds, derived=""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+def table3(mats):
+    print("# table3: name,us_per_call,nnz|density|avg_work|group_var")
+    for name, A in mats:
+        t, stats = _time_call(lambda: sg.work_stats(A, A))
+        _emit(f"table3.{name}", t,
+              f"nnz={stats['nnz']}|dens={stats['density']:.2e}|"
+              f"work={stats['avg_work_per_row']:.1f}|"
+              f"var={stats['work_var_per_group']:.2f}")
+
+
+def fig8(mats, fast=False):
+    print("# fig8: impl.matrix,us_per_call,speedup_vs_scl_hash")
+    rows = {}
+    for name, A in mats:
+        res = {}
+        res["scl-hash"], _ = _time_call(lambda: sg.spgemm_scl_hash(A, A))
+        res["scl-array"], _ = _time_call(lambda: sg.spgemm_scl_array(A, A))
+        cap = int(sg.row_work(A, A).sum())
+        _ = sg.spgemm_esc(A, A, cap)  # warm the jit cache
+        res["vec-radix(esc)"], _ = _time_call(
+            lambda: sg.spgemm_esc(A, A, cap), repeat=3)
+        if not fast:
+            res["spz"], _ = _time_call(
+                lambda: sg.spgemm_spz(A, A, R=16, impl="xla")[0])
+            res["spz-rsort"], _ = _time_call(
+                lambda: sg.spgemm_spz(A, A, R=16, rsort=True, impl="xla")[0])
+        base = res["scl-hash"]
+        for impl, t in res.items():
+            _emit(f"fig8.{impl}.{name}", t, f"speedup={base / t:.2f}")
+        rows[name] = res
+    # geomean speedups (the paper's headline numbers)
+    for impl in next(iter(rows.values())).keys():
+        sp = [rows[n]["scl-hash"] / rows[n][impl] for n in rows]
+        gm = float(np.exp(np.mean(np.log(sp))))
+        _emit(f"fig8.geomean.{impl}", 0.0, f"speedup={gm:.2f}")
+
+
+def fig9(mats):
+    print("# fig9: spz phase breakdown (fractions of total)")
+    for name, A in mats:
+        for label, rsort in (("spz", False), ("spz-rsort", True)):
+            _, stats = sg.spgemm_spz(A, A, R=16, rsort=rsort, impl="xla")
+            tot = (stats.t_preprocess + stats.t_expand + stats.t_sort +
+                   stats.t_output) or 1e-9
+            _emit(f"fig9.{label}.{name}", tot,
+                  f"pre={stats.t_preprocess / tot:.2f}|"
+                  f"expand={stats.t_expand / tot:.2f}|"
+                  f"sort={stats.t_sort / tot:.2f}|"
+                  f"out={stats.t_output / tot:.2f}")
+
+
+def fig10(mats):
+    """Memory-traffic proxy: tuples moved per element (the paper measures
+    L1D accesses). ESC (vec-radix): expansion (1 write) + 32-bit LSD radix
+    sort = 4 passes x (read + scattered write) over the full product list
+    + compression pass = ~10 tuple-movements per expanded tuple, with the
+    scattered writes spanning cache lines (the effect Figure 10 shows).
+    spz: every tuple is touched once per sort chunk + once per surviving
+    merge round (duplicates drop out early), all unit-stride."""
+    print("# fig10: traffic esc_elems vs spz chunk loads+stores")
+    for name, A in mats:
+        work = int(sg.row_work(A, A).sum())
+        esc_elems = 10 * work
+        _, st = sg.spgemm_spz(A, A, R=16, impl="xla")
+        spz_elems = st.sort_elems + st.zip_elems
+        _emit(f"fig10.{name}", 0.0,
+              f"esc_elems={esc_elems}|spz_elems={spz_elems}|"
+              f"reduction={esc_elems / max(1, spz_elems):.2f}x")
+
+
+def fig11(mats):
+    # S=64 (4 lock-step groups of 16 batched per issue) keeps the python
+    # driver tractable; instruction-count *ratios* match the S=16 ISA since
+    # counts scale with ceil(rows/S) x per-group iterations either way.
+    print("# fig11: dynamic mssortk+mszipk instruction counts")
+    for name, A in mats:
+        _, s0 = sg.spgemm_spz(A, A, R=16, S=64, impl="xla")
+        _, s1 = sg.spgemm_spz(A, A, R=16, S=64, rsort=True, impl="xla")
+        _emit(f"fig11.{name}", 0.0,
+              f"spz={s0.n_mssort + s0.n_mszip}|"
+              f"rsort={s1.n_mssort + s1.n_mszip}|"
+              f"reduction={(s0.n_mssort + s0.n_mszip) / max(1, s1.n_mssort + s1.n_mszip):.2f}x")
+
+
+def table4():
+    """Paper Table IV (12nm post-synthesis) transcription + the TPU-side
+    cost model of the zipper primitives (see DESIGN.md §7)."""
+    print("# table4: component,area_kum2,count_base|count_spz")
+    rows = [
+        ("baseline_PE", 0.45, "x256|-"),
+        ("sparsezipper_PE", 0.51, "-|x256"),
+        ("skew_buffer_16lane", 3.16, "x2|x2"),
+        ("deskew_buffer_16lane", 3.16, "x1|x2"),
+        ("matrix_register_16x512b", 0.96, "x16|x16"),
+        ("popcount_logic", 0.45, "-|x1"),
+    ]
+    for n, a, c in rows:
+        _emit(f"table4.{n}", 0.0, f"area={a}|{c}")
+    base = 0.45 * 256 + 3.16 * 2 + 3.16 + 0.96 * 16
+    spz = 0.51 * 256 + 3.16 * 2 + 3.16 * 2 + 0.96 * 16 + 0.45
+    _emit("table4.total", 0.0,
+          f"base={base:.1f}|spz={spz:.1f}|overhead={100 * (spz / base - 1):.2f}%")
+    # TPU-side: zipper sort/merge cost per chunk relative to an MXU matmul
+    R = 128
+    sort_stages = sum(range(1, R.bit_length()))        # log^2 network
+    merge_stages = (2 * R).bit_length() - 1
+    _emit("table4.tpu_model", 0.0,
+          f"R={R}|sort_stages={sort_stages}|merge_stages={merge_stages}|"
+          f"compress=1xMXU_128x128_matmul")
+
+
+def moe_bench():
+    print("# moe: zipper dispatch vs einsum dispatch (CPU wall time)")
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import base as cb
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(cb.get_smoke_config("arctic_480b"),
+                              d_model=128, num_experts=16, top_k=2,
+                              moe_d_ff=256, capacity_factor=1.5)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (8, 512, cfg.d_model), jnp.float32)
+    for disp in ("einsum", "zipper"):
+        fn = jax.jit(lambda p, x: moe_mod.moe_block(p, x, cfg,
+                                                    dispatch=disp)[0])
+        fn(p, x).block_until_ready()
+        t, _ = _time_call(lambda: fn(p, x).block_until_ready(), repeat=5)
+        _emit(f"moe.{disp}", t, f"tokens_per_s={8 * 512 / t:.0f}")
+
+
+def kernels_bench():
+    print("# kernels: stream sort/merge (pallas-interpret vs xla oracle)")
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    S, R = 256, 128
+    keys = jnp.asarray(rng.integers(0, 64, (S, R)).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal((S, R)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(0, R, S).astype(np.int32))
+    for impl in ("xla", "pallas"):
+        fn = lambda: ops.stream_sort(keys, vals, lens, impl=impl)[0].block_until_ready()
+        fn()
+        t, _ = _time_call(fn, repeat=3)
+        _emit(f"kernels.stream_sort.{impl}", t,
+              f"streams={S}|R={R}|Melem_per_s={S * R / t / 1e6:.1f}")
+
+
+ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,
+       "fig11": fig11, "table4": table4, "moe": moe_bench,
+       "kernels": kernels_bench}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("which", nargs="*", default=list(ALL))
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow spz wall-time runs in fig8")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="first N matrices only")
+    args = ap.parse_args()
+    mats = None
+    for name in args.which:
+        fn = ALL[name]
+        if name in ("table3", "fig8", "fig9", "fig10", "fig11"):
+            if mats is None:
+                mats = [(n, datasets.build(n))
+                        for n in datasets.names(args.limit)]
+            if name == "fig8":
+                fn(mats, fast=args.fast)
+            else:
+                fn(mats)
+        else:
+            fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Insert the dry-run/roofline tables into EXPERIMENTS.md at the markers.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+import json
+import re
+import sys
+
+from benchmarks.roofline_report import render, render_multipod_check
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    base = {k: v for k, v in results.items() if len(k.split("|")) == 3}
+    md = open("EXPERIMENTS.md").read()
+    dry = ("### Compile status (every assigned cell × both meshes)\n\n"
+           + render_multipod_check(base))
+    roof = ("### Single-pod (16×16 = 256 chips)\n\n" + render(base, "16x16")
+            + "\n\n### Multi-pod (2×16×16 = 512 chips)\n\n"
+            + render(base, "2x16x16"))
+    md = re.sub(r"<!-- DRYRUN_TABLES -->.*?(?=\n## §Roofline)",
+                "<!-- DRYRUN_TABLES -->\n\n" + dry + "\n",
+                md, flags=re.S)
+    md = re.sub(r"<!-- ROOFLINE_TABLES -->.*?(?=\n## §Perf)",
+                "<!-- ROOFLINE_TABLES -->\n\n" + roof + "\n",
+                md, flags=re.S)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated:", len(base), "cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the SparseZipper primitives and SpGEMM engine in 2 minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import spgemm as sg
+from repro.core.formats import random_sparse, EMPTY
+from repro.kernels import ops
+
+# --- 1. the zipper primitives -------------------------------------------
+# Four streams of key-value tuples (one per matrix-register row in the
+# paper); sort each chunk, accumulating duplicate keys.
+keys = jnp.asarray(np.array([[5, 2, 5, 9], [7, 7, 7, 7],
+                             [3, 1, 4, 1], [0, 0, 0, 0]], np.int32))
+vals = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+lens = jnp.asarray(np.array([4, 4, 4, 2], np.int32))
+k, v, n = ops.stream_sort(keys, vals, lens, impl="pallas")
+print("mssort  keys:", np.asarray(k))
+print("        vals:", np.asarray(v))
+print("        lens:", np.asarray(n), " (duplicates were accumulated)")
+
+# Merge two sorted chunks with data-dependent advancement (mszip).
+ka = jnp.asarray(np.array([[1, 3, 5, 9]], np.int32))
+kb = jnp.asarray(np.array([[2, 3, 4, 100]], np.int32))
+va = jnp.ones((1, 4), jnp.float32)
+vb = jnp.full((1, 4), 10.0, jnp.float32)
+l4 = jnp.asarray(np.array([4], np.int32))
+klo, vlo, khi, vhi, ca, cb, ol = ops.stream_merge(ka, va, l4, kb, vb, l4,
+                                                  impl="pallas")
+print("\nmszip   merged:", np.asarray(klo)[0], "+", np.asarray(khi)[0])
+print("        consumed a,b:", int(ca[0]), int(cb[0]),
+      "(the 100 waits for the next chunk — merge bit unset)")
+
+# --- 2. SpGEMM end-to-end ------------------------------------------------
+A = random_sparse(256, 256, 0.02, seed=1, pattern="powerlaw")
+C_ref = sg.spgemm_scl_array(A, A)          # scalar oracle
+C_spz, stats = sg.spgemm_spz(A, A, R=16)   # SparseZipper merge-based
+err = np.abs(np.asarray(C_ref.to_dense()) -
+             np.asarray(C_spz.to_dense())).max()
+print(f"\nSpGEMM 256x256 A@A: max err vs oracle = {err:.2e}")
+print(f"dynamic instructions: {stats.n_mssort} mssort, {stats.n_mszip} mszip")
+print(f"chunk traffic: {stats.chunk_loads} loads, {stats.chunk_stores} stores")

@@ -1,0 +1,45 @@
+"""Serving example: batched prefill+decode with the engine, greedy and
+top-k sampling, plus the zipper top-k merge over vocab shards.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as cb
+from repro.models import model as M
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import zipper_topk
+
+
+def main():
+    cfg = cb.get_smoke_config("tinyllama_1_1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, max_seq=96)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, n, dtype=np.int32),
+                    max_new_tokens=24)
+            for n in (5, 9, 12, 7)]  # ragged prompts, one shared batch
+    t0 = time.time()
+    reqs = eng.generate(reqs)
+    dt = time.time() - t0
+    for i, r in enumerate(reqs):
+        print(f"req{i} ({len(r.prompt)} prompt tokens) ->",
+              r.out[:10].tolist(), "...")
+    tok = sum(len(r.out) for r in reqs)
+    print(f"{tok} tokens in {dt:.2f}s ({tok / dt:.0f} tok/s incl. compile)")
+
+    # zipper top-k: merge per-model-shard sorted logit streams (mszip)
+    shards = [rng.standard_normal(cfg.vocab_size // 4).astype(np.float32)
+              for _ in range(4)]
+    vals, ids = zipper_topk(shards, k=8)
+    full = np.concatenate(shards)
+    assert set(ids) == set(np.argsort(full)[::-1][:8])
+    print("zipper top-k over 4 vocab shards matches global top-k:",
+          ids.tolist())
+
+
+if __name__ == "__main__":
+    main()

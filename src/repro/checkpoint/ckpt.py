@@ -1,0 +1,115 @@
+"""Checkpointing: atomic, async-capable, keep-k, reshard-on-restore.
+
+Layout: <dir>/step_<n>/ arrays.npz + tree.json, committed by atomically
+renaming a .tmp directory (a torn write can never be mistaken for a
+complete checkpoint). ``restore`` rebuilds arrays with whatever shardings
+the *restoring* process supplies — this is the elastic-scaling path: save
+on one mesh, restore on another.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    return [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         blocking: bool = True) -> threading.Thread | None:
+    """Save a pytree. blocking=False returns the committing thread (async
+    save: device->host copy happens before returning; disk IO overlaps)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    # device -> host before going async (so training can mutate buffers)
+    host_leaves = [np.asarray(l) for l in leaves]
+    dtypes = [str(l.dtype) for l in host_leaves]
+    # npz cannot represent ml_dtypes (bfloat16 -> void): store a u16 view
+    host_leaves = [
+        l.view(np.uint16) if l.dtype.str == "<V2" or "bfloat16" in str(l.dtype)
+        else l
+        for l in host_leaves]
+    paths = _paths(tree)
+
+    def commit():
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": l for i, l in enumerate(host_leaves)})
+        meta = {"step": step, "paths": paths, "dtypes": dtypes}
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if blocking:
+        commit()
+        return None
+    t = threading.Thread(target=commit, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+            if d.startswith("step_")]
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target_tree: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_tree`` (shapes/dtypes source
+    of truth is the checkpoint). ``shardings``: optional pytree of
+    NamedShardings — arrays are placed with them (reshard-on-restore;
+    the saving mesh is irrelevant)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        host = [z[f"a{i}"] for i in range(len(z.files))]
+    with open(os.path.join(d, "tree.json")) as f:
+        meta = json.load(f)
+    import ml_dtypes
+    host = [h.view(ml_dtypes.bfloat16) if dt == "bfloat16" else h
+            for h, dt in zip(host, meta["dtypes"])]
+    leaves, treedef = _flatten(target_tree)
+    assert len(leaves) == len(host), \
+        f"checkpoint has {len(host)} leaves, target {len(leaves)}"
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        out = [jax.device_put(h, s) for h, s in zip(host, shard_leaves)]
+    else:
+        out = [jax.numpy.asarray(h) for h in host]
+    return jax.tree_util.tree_unflatten(treedef, out)

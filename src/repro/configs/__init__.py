@@ -1,0 +1,2 @@
+"""Architecture configs. ``get_config(name)`` resolves any assigned arch id."""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config, list_configs  # noqa: F401

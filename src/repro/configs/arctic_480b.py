@@ -1,0 +1,27 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+bf16 optimizer moments: fp32 m/v do not fit 16 GB/chip at 256 chips
+(480e9 × (4+4+4+2) / 256 = 26 GB); bf16 params+m+v = 11.3 GB (see
+EXPERIMENTS.md §Dry-run)."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32000,
+    moe=True, num_experts=128, top_k=2, moe_d_ff=4864,
+    dense_residual=True,
+    fsdp=True, remat="block",
+    param_dtype="bfloat16", opt_state_dtype="bfloat16",
+)
+
+
+def smoke():
+    return dataclasses.replace(
+        CONFIG, name="arctic-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=384,
+        num_experts=8, top_k=2, moe_d_ff=96, fsdp=False, remat="none",
+        param_dtype="float32", opt_state_dtype="float32",
+        moe_dispatch="einsum")

@@ -1,0 +1,175 @@
+"""Static-shape sparse matrix formats for JAX.
+
+JAX requires static shapes, so all sparse containers here are *padded*:
+``indices``/``data`` arrays have a fixed capacity ``nnz_cap`` and rows are
+delimited by ``indptr`` exactly as in classic CSR. Padding slots carry the
+sentinel key ``EMPTY`` (INT32_MAX) so they sort to the end of any key-value
+stream — the same trick SparseZipper uses to tag invalid/duplicate keys
+flowing through the systolic array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel key: sorts after every valid column index.
+EMPTY = np.int32(np.iinfo(np.int32).max)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSR:
+    """Padded CSR matrix. ``indptr``: (n_rows+1,) int32; ``indices``/``data``:
+    (nnz_cap,) with valid entries in [indptr[0], indptr[n_rows]) and padding
+    (= EMPTY / 0) afterwards."""
+
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+    data: jnp.ndarray
+    shape: Tuple[int, int]
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.data), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    # -- properties ------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_cap(self) -> int:
+        return int(self.indices.shape[0])
+
+    def nnz(self):
+        return self.indptr[-1]
+
+    def row_lengths(self):
+        return self.indptr[1:] - self.indptr[:-1]
+
+    # -- conversions -----------------------------------------------------
+    def to_dense(self) -> jnp.ndarray:
+        n_rows, n_cols = self.shape
+        rows = row_ids_from_indptr(self.indptr, self.nnz_cap)
+        valid = jnp.arange(self.nnz_cap) < self.indptr[-1]
+        r = jnp.where(valid, rows, 0)
+        c = jnp.where(valid, self.indices, 0)
+        v = jnp.where(valid, self.data, 0.0)
+        out = jnp.zeros((n_rows, n_cols), self.data.dtype)
+        return out.at[r, c].add(v)
+
+
+def row_ids_from_indptr(indptr: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Expand CSR indptr into per-entry row ids (length ``cap``)."""
+    n_rows = indptr.shape[0] - 1
+    # row id of entry e = number of row starts <= e, minus 1
+    e = jnp.arange(cap, dtype=indptr.dtype)
+    return jnp.searchsorted(indptr[1:], e, side="right").astype(jnp.int32).clip(0, n_rows - 1)
+
+
+def csr_from_dense(dense, nnz_cap: int | None = None) -> CSR:
+    """Build a padded CSR from a dense numpy/jnp array (host-side)."""
+    dense = np.asarray(dense)
+    n_rows, n_cols = dense.shape
+    r, c = np.nonzero(dense)
+    v = dense[r, c]
+    nnz = len(r)
+    cap = nnz_cap if nnz_cap is not None else max(nnz, 1)
+    assert cap >= nnz, f"nnz_cap {cap} < nnz {nnz}"
+    indptr = np.zeros(n_rows + 1, np.int32)
+    np.add.at(indptr[1:], r, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    indices = np.full(cap, EMPTY, np.int32)
+    data = np.zeros(cap, dense.dtype if dense.dtype.kind == "f" else np.float32)
+    indices[:nnz] = c
+    data[:nnz] = v
+    return CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data), (n_rows, n_cols))
+
+
+def csr_from_coo(rows, cols, vals, shape, nnz_cap: int | None = None) -> CSR:
+    """Host-side COO→CSR (rows need not be sorted; duplicates are summed)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals)
+    key = rows * shape[1] + cols
+    order = np.argsort(key, kind="stable")
+    key, rows, cols, vals = key[order], rows[order], cols[order], vals[order]
+    if len(key):
+        uniq, inv = np.unique(key, return_inverse=True)
+        acc = np.zeros(len(uniq), vals.dtype)
+        np.add.at(acc, inv, vals)
+        rows = (uniq // shape[1]).astype(np.int32)
+        cols = (uniq % shape[1]).astype(np.int32)
+        vals = acc
+    nnz = len(rows)
+    cap = nnz_cap if nnz_cap is not None else max(nnz, 1)
+    indptr = np.zeros(shape[0] + 1, np.int32)
+    np.add.at(indptr[1:], rows, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    indices = np.full(cap, EMPTY, np.int32)
+    data = np.zeros(cap, np.float32)
+    indices[:nnz] = cols
+    data[:nnz] = vals.astype(np.float32)
+    return CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data), shape)
+
+
+def random_sparse(n_rows: int, n_cols: int, density: float, *, seed: int = 0,
+                  pattern: str = "uniform", skew: float = 1.5) -> CSR:
+    """Synthetic sparse matrices with controllable structure.
+
+    pattern:
+      uniform   — iid Bernoulli(density)
+      powerlaw  — Zipf-distributed row degrees (graph-like, high work variance)
+      banded    — nonzeros near the diagonal (scientific-simulation-like)
+      blocked   — random dense blocks (mesh/FEM-like)
+    """
+    rng = np.random.default_rng(seed)
+    target_nnz = max(1, int(n_rows * n_cols * density))
+    if pattern == "uniform":
+        rows = rng.integers(0, n_rows, target_nnz)
+        cols = rng.integers(0, n_cols, target_nnz)
+    elif pattern == "powerlaw":
+        deg = rng.zipf(skew, n_rows).astype(np.int64)
+        deg = np.minimum(deg * max(1, target_nnz // max(1, deg.sum())), n_cols // 2 + 1)
+        # rescale to target nnz
+        scale = target_nnz / max(1, deg.sum())
+        deg = np.maximum(1, (deg * scale).astype(np.int64))
+        rows = np.repeat(np.arange(n_rows), deg)
+        cols = rng.integers(0, n_cols, len(rows))
+    elif pattern == "banded":
+        bw = max(2, int(density * n_cols * 4))
+        rows = rng.integers(0, n_rows, target_nnz)
+        offs = rng.integers(-bw, bw + 1, target_nnz)
+        cols = np.clip(rows * n_cols // n_rows + offs, 0, n_cols - 1)
+    elif pattern == "blocked":
+        bs = 8
+        nb = max(1, target_nnz // (bs * bs))
+        br = rng.integers(0, max(1, n_rows - bs), nb)
+        bc = rng.integers(0, max(1, n_cols - bs), nb)
+        rr = br[:, None, None] + np.arange(bs)[None, :, None]
+        cc = bc[:, None, None] + np.arange(bs)[None, None, :]
+        rows = np.broadcast_to(rr, (nb, bs, bs)).reshape(-1)
+        cols = np.broadcast_to(cc, (nb, bs, bs)).reshape(-1)
+    else:
+        raise ValueError(f"unknown pattern {pattern}")
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return csr_from_coo(rows, cols, vals, (n_rows, n_cols))
+
+
+def csr_to_numpy(m: CSR):
+    """Return (indptr, indices, data) as numpy, truncated to true nnz."""
+    indptr = np.asarray(m.indptr)
+    nnz = int(indptr[-1])
+    return indptr, np.asarray(m.indices)[:nnz], np.asarray(m.data)[:nnz]

@@ -1,0 +1,411 @@
+"""Row-wise (Gustavson) SpGEMM engines — the paper's §V-B implementations.
+
+Five implementations, mirroring the paper's evaluation:
+
+  scl-array  — scalar row loop with a dense accumulator row (Gilbert et al.)
+  scl-hash   — scalar row loop with a hash-style unique/accumulate
+  esc        — vectorized Expand-Sort-Compress (the vec-radix analogue);
+               fully jittable with static capacities (XLA sort plays the
+               radix sort's role)
+  spz        — merge-based SpGEMM on the SparseZipper primitives: chunked
+               stream sort + zip-merge tree with data-dependent advancement,
+               lock-step groups of S streams
+  spz-rsort  — spz with row indices pre-sorted by per-row work to reduce
+               lock-step imbalance (paper §V-B / Fig. 9)
+
+All produce identical CSR outputs (property-tested against scl-array).
+``spz`` returns dynamic-instruction statistics (mssort/mszip counts) used by
+the Fig. 10/11 benchmark analogues.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR, EMPTY, csr_from_coo, csr_to_numpy, row_ids_from_indptr
+from repro.core import stream as kvstream
+
+
+# ---------------------------------------------------------------------------
+# work statistics (Table III)
+# ---------------------------------------------------------------------------
+
+def row_work(A: CSR, B: CSR) -> np.ndarray:
+    """#multiplications to compute each output row (Table III 'Work')."""
+    a_indptr, a_idx, _ = csr_to_numpy(A)
+    b_indptr = np.asarray(B.indptr)
+    blen = (b_indptr[1:] - b_indptr[:-1]).astype(np.int64)
+    w = np.zeros(A.n_rows, np.int64)
+    contrib = blen[a_idx]
+    rows = np.repeat(np.arange(A.n_rows), a_indptr[1:] - a_indptr[:-1])
+    np.add.at(w, rows, contrib)
+    return w
+
+
+def work_stats(A: CSR, B: CSR, group: int = 16) -> dict:
+    """Per-row and per-group work stats (Table III reproduction)."""
+    w = row_work(A, B)
+    n = len(w)
+    pad = (-n) % group
+    wg = np.pad(w, (0, pad)).reshape(-1, group).sum(1)
+    return {
+        "nnz": int(np.asarray(A.indptr)[-1]),
+        "density": float(np.asarray(A.indptr)[-1]) / (A.n_rows * A.n_cols),
+        "avg_work_per_row": float(w.mean()),
+        "avg_work_per_group": float(wg.mean()),
+        "work_var_per_group": float(wg.std() / max(wg.mean(), 1e-12)),
+        "total_work": int(w.sum()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scalar baselines (numpy, row-at-a-time — the paper's scl-*)
+# ---------------------------------------------------------------------------
+
+def spgemm_scl_array(A: CSR, B: CSR) -> CSR:
+    """Dense-accumulator-row scalar SpGEMM (oracle for everything else)."""
+    a_indptr, a_idx, a_val = csr_to_numpy(A)
+    b_indptr, b_idx, b_val = csr_to_numpy(B)
+    acc = np.zeros(B.n_cols, np.float64)
+    out_r, out_c, out_v = [], [], []
+    for i in range(A.n_rows):
+        touched = []
+        for t in range(a_indptr[i], a_indptr[i + 1]):
+            j, av = a_idx[t], a_val[t]
+            s, e = b_indptr[j], b_indptr[j + 1]
+            cols = b_idx[s:e]
+            acc[cols] += av * b_val[s:e]
+            touched.append(cols)
+        if touched:
+            cols = np.unique(np.concatenate(touched))
+            vals = acc[cols]
+            acc[cols] = 0.0
+            nz = vals != 0.0
+            out_r.append(np.full(nz.sum(), i, np.int64))
+            out_c.append(cols[nz])
+            out_v.append(vals[nz])
+    if not out_r:
+        return csr_from_coo([], [], [], (A.n_rows, B.n_cols))
+    return csr_from_coo(np.concatenate(out_r), np.concatenate(out_c),
+                        np.concatenate(out_v), (A.n_rows, B.n_cols))
+
+
+def spgemm_scl_hash(A: CSR, B: CSR) -> CSR:
+    """Hash-accumulate scalar SpGEMM (paper's scl-hash; here the per-row
+    hash table is modelled by sort-unique accumulation over the expanded
+    products of one row at a time, then a final sort — same asymptotics,
+    no O(n_cols) state)."""
+    a_indptr, a_idx, a_val = csr_to_numpy(A)
+    b_indptr, b_idx, b_val = csr_to_numpy(B)
+    out_r, out_c, out_v = [], [], []
+    for i in range(A.n_rows):
+        ks, vs = [], []
+        for t in range(a_indptr[i], a_indptr[i + 1]):
+            j, av = a_idx[t], a_val[t]
+            s, e = b_indptr[j], b_indptr[j + 1]
+            ks.append(b_idx[s:e])
+            vs.append(av * b_val[s:e])
+        if not ks:
+            continue
+        k = np.concatenate(ks)
+        v = np.concatenate(vs)
+        uk, inv = np.unique(k, return_inverse=True)
+        uv = np.zeros(len(uk), np.float64)
+        np.add.at(uv, inv, v)
+        nz = uv != 0.0
+        out_r.append(np.full(nz.sum(), i, np.int64))
+        out_c.append(uk[nz])
+        out_v.append(uv[nz])
+    if not out_r:
+        return csr_from_coo([], [], [], (A.n_rows, B.n_cols))
+    return csr_from_coo(np.concatenate(out_r), np.concatenate(out_c),
+                        np.concatenate(out_v), (A.n_rows, B.n_cols))
+
+
+# ---------------------------------------------------------------------------
+# ESC (vec-radix analogue) — fully jittable with static capacities
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cap_products", "n_rows", "n_cols"))
+def _esc_core(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
+              cap_products: int, n_rows: int, n_cols: int):
+    nnz_a_cap = a_idx.shape[0]
+    # --- expansion: product p belongs to A-entry t = searchsorted(Wcum, p)
+    a_rows = row_ids_from_indptr(a_indptr, nnz_a_cap)
+    blen = b_indptr[1:] - b_indptr[:-1]
+    nnz_a = a_indptr[-1]
+    t_valid = jnp.arange(nnz_a_cap) < nnz_a
+    j_of_t = jnp.where(t_valid, a_idx, 0)
+    w_t = jnp.where(t_valid, blen[j_of_t], 0)
+    wcum = jnp.cumsum(w_t)
+    total_work = wcum[-1]
+    p = jnp.arange(cap_products, dtype=jnp.int32)
+    t_of_p = jnp.searchsorted(wcum, p, side="right").astype(jnp.int32)
+    t_of_p = jnp.clip(t_of_p, 0, nnz_a_cap - 1)
+    p_valid = p < total_work
+    base = jnp.where(t_of_p > 0, wcum[t_of_p - 1], 0)
+    s_of_p = b_indptr[j_of_t[t_of_p]] + (p - base)
+    s_of_p = jnp.clip(s_of_p, 0, b_idx.shape[0] - 1)
+    prod_row = jnp.where(p_valid, a_rows[t_of_p], n_rows)
+    prod_col = jnp.where(p_valid, b_idx[s_of_p], n_cols)
+    prod_val = jnp.where(p_valid, a_val[t_of_p] * b_val[s_of_p], 0.0)
+    # --- sort by (row, col): two stable passes (the radix-sort analogue)
+    o1 = jnp.argsort(prod_col, stable=True)
+    r1, c1, v1 = prod_row[o1], prod_col[o1], prod_val[o1]
+    o2 = jnp.argsort(r1, stable=True)
+    r2, c2, v2 = r1[o2], c1[o2], v1[o2]
+    # --- compress: accumulate duplicate (row, col)
+    first = (r2 != jnp.roll(r2, 1)) | (c2 != jnp.roll(c2, 1))
+    first = first.at[0].set(True)
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    out_v = jax.ops.segment_sum(v2, seg, num_segments=cap_products)
+    pos = seg
+    out_r = jnp.full(cap_products, n_rows, jnp.int32).at[pos].set(r2.astype(jnp.int32))
+    out_c = jnp.full(cap_products, n_cols, jnp.int32).at[pos].set(c2.astype(jnp.int32))
+    valid_out = (out_r < n_rows) & (out_v != 0.0)
+    n_out = jnp.sum(valid_out, dtype=jnp.int32)
+    return out_r, out_c, out_v, valid_out, n_out
+
+
+def spgemm_esc(A: CSR, B: CSR, cap_products: int | None = None) -> CSR:
+    """Vectorized Expand-Sort-Compress SpGEMM (the vec-radix analogue)."""
+    if cap_products is None:
+        cap_products = int(max(16, row_work(A, B).sum()))
+    r, c, v, valid, _ = _esc_core(A.indptr, A.indices, A.data,
+                                  B.indptr, B.indices, B.data,
+                                  cap_products, A.n_rows, B.n_cols)
+    r, c, v, valid = map(np.asarray, (r, c, v, valid))
+    return csr_from_coo(r[valid], c[valid], v[valid], (A.n_rows, B.n_cols))
+
+
+# ---------------------------------------------------------------------------
+# SparseZipper merge-based SpGEMM (spz / spz-rsort)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpzStats:
+    """Dynamic instruction counts (Fig. 11), traffic (Fig. 10) and the
+    execution-time breakdown (Fig. 9)."""
+    n_mssort: int = 0        # sort-instruction issues (S-stream lock-step)
+    n_mszip: int = 0         # zip-instruction issues
+    sort_elems: int = 0      # key-value tuples moved through sort
+    zip_elems: int = 0       # key-value tuples moved through merge
+    chunk_loads: int = 0     # mlxe.t analogue (chunk fronts built)
+    chunk_stores: int = 0    # msxe.t analogue
+    t_preprocess: float = 0.0  # row-work calc (+ rsort row ordering)
+    t_expand: float = 0.0      # stream expansion (multiplications)
+    t_sort: float = 0.0        # stream sorting + merging
+    t_output: float = 0.0      # output generation / row reordering
+
+
+def _expand_group(rows, a_indptr, a_idx, a_val, b_indptr, b_idx, b_val):
+    """Vectorized expansion (RVV phase in the paper) for a group of rows.
+    Returns per-row (cols, vals) numpy arrays of partial products."""
+    out = []
+    for i in rows:
+        s, e = a_indptr[i], a_indptr[i + 1]
+        js = a_idx[s:e]
+        avs = a_val[s:e]
+        if len(js) == 0:
+            out.append((np.empty(0, np.int32), np.empty(0, np.float32)))
+            continue
+        starts = b_indptr[js]
+        lens = (b_indptr[js + 1] - starts).astype(np.int64)
+        total = int(lens.sum())
+        if total == 0:
+            out.append((np.empty(0, np.int32), np.empty(0, np.float32)))
+            continue
+        pos = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens) \
+            + np.repeat(starts, lens)
+        cols = b_idx[pos].astype(np.int32)
+        vals = (np.repeat(avs, lens) * b_val[pos]).astype(np.float32)
+        out.append((cols, vals))
+    return out
+
+
+def _sort_phase(products, R, S, impl, stats: SpzStats):
+    """Chunk-sort every stream's products into sorted unique partitions.
+
+    Returns a list of partitions; partition p = (keys (S, R), vals (S, R),
+    lens (S,)) — the sorted-unique output of chunk p across all lock-step
+    streams (lens[s] == 0 where stream s has no p-th chunk)."""
+    plens = np.array([len(k) for k, _ in products], np.int64)
+    max_len = int(plens.max()) if S else 0
+    n_chunks = max(1, -(-max_len // R)) if max_len else 0
+    # pad the ragged product lists into one (S, n_chunks*R) buffer
+    K = np.full((S, n_chunks * R), EMPTY, np.int32)
+    V = np.zeros((S, n_chunks * R), np.float32)
+    for s, (k, v) in enumerate(products):
+        K[s, :len(k)] = k
+        V[s, :len(k)] = v
+    parts = []
+    for c in range(n_chunks):
+        lens = np.clip(plens - c * R, 0, R).astype(np.int32)
+        if not lens.any():
+            break
+        keys = K[:, c * R:(c + 1) * R]
+        vals = V[:, c * R:(c + 1) * R]
+        ok, ov, ol = kvstream.sort_chunks(keys, vals, lens, impl=impl)
+        stats.n_mssort += 1
+        stats.sort_elems += int(lens.sum())
+        stats.chunk_loads += 1
+        stats.chunk_stores += 1
+        parts.append((np.asarray(ok), np.asarray(ov),
+                      np.asarray(ol).astype(np.int64)))
+    return parts
+
+
+def _take_chunk(K, V, lens, ptr, R):
+    """Vectorized chunk front: rows [ptr, min(ptr+R, lens)) of each stream.
+    K/V: (S, L) padded; returns (keys (S,R), vals (S,R), n (S,))."""
+    S, L = K.shape
+    idx = ptr[:, None] + np.arange(R)[None, :]
+    ok = idx < lens[:, None]
+    idx_c = np.minimum(idx, max(L - 1, 0))
+    keys = np.where(ok, np.take_along_axis(K, idx_c, 1), EMPTY).astype(np.int32)
+    vals = np.where(ok, np.take_along_axis(V, idx_c, 1), 0.0).astype(np.float32)
+    return keys, vals, ok.sum(1).astype(np.int32)
+
+
+def _put_rows(K, V, optr, src_k, src_v, n):
+    """Vectorized append: write src[s, :n[s]] at K[s, optr[s]:...].
+    Masked fancy indexing — invalid lanes are simply not written (a clamp
+    here would let a masked write collide with the last valid slot)."""
+    W = src_k.shape[1]
+    idx = optr[:, None] + np.arange(W)[None, :]
+    ok = np.arange(W)[None, :] < n[:, None]
+    rows, _ = np.nonzero(ok)
+    K[rows, idx[ok]] = src_k[ok]
+    V[rows, idx[ok]] = src_v[ok]
+
+
+def _merge_round(A, B, R, impl, stats: SpzStats):
+    """Merge partition pair lock-step across streams, chunk by chunk.
+    A, B: (keys (S, La), vals, lens (S,)) padded partitions.
+    Returns merged (keys (S, La+Lb), vals, lens)."""
+    (Ka, Va, lensA), (Kb, Vb, lensB) = A, B
+    S = Ka.shape[0]
+    Lo = Ka.shape[1] + Kb.shape[1]
+    Ko = np.full((S, Lo), EMPTY, np.int32)
+    Vo = np.zeros((S, Lo), np.float32)
+    pa = np.zeros(S, np.int64)
+    pb = np.zeros(S, np.int64)
+    optr = np.zeros(S, np.int64)
+    while True:
+        # only streams with BOTH sides unexhausted participate (the driver
+        # copy-through below handles the rest)
+        both = (pa < lensA) & (pb < lensB)
+        if not both.any():
+            break
+        ka, va, la = _take_chunk(Ka, Va, np.where(both, lensA, 0), pa, R)
+        kb, vb, lb = _take_chunk(Kb, Vb, np.where(both, lensB, 0), pb, R)
+        res = kvstream.merge_chunks(ka, va, la, kb, vb, lb, impl=impl)
+        klo, vlo, khi, vhi, ca, cb, ol = map(np.asarray, res)
+        stats.n_mszip += 1
+        stats.zip_elems += int(la.sum() + lb.sum())
+        stats.chunk_loads += 2
+        stats.chunk_stores += 1
+        merged_k = np.concatenate([klo, khi], 1)
+        merged_v = np.concatenate([vlo, vhi], 1)
+        _put_rows(Ko, Vo, optr, merged_k, merged_v, ol.astype(np.int64))
+        optr += ol
+        pa += ca
+        pb += cb
+    # copy-through tails (one side exhausted)
+    for (K, V, lens, ptr) in ((Ka, Va, lensA, pa), (Kb, Vb, lensB, pb)):
+        rem = (lens - ptr).clip(0)
+        W = int(rem.max()) if len(rem) else 0
+        if W > 0:
+            idx = np.minimum(ptr[:, None] + np.arange(W)[None, :],
+                             K.shape[1] - 1)
+            ok = np.arange(W)[None, :] < rem[:, None]
+            src_k = np.where(ok, np.take_along_axis(K, idx, 1), EMPTY)
+            src_v = np.where(ok, np.take_along_axis(V, idx, 1), 0.0)
+            _put_rows(Ko, Vo, optr, src_k.astype(np.int32),
+                      src_v.astype(np.float32), rem)
+            optr += rem
+            stats.chunk_stores += int((-(-rem // R)).max())
+    return Ko, Vo, optr.astype(np.int64)
+
+
+def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
+               rsort: bool = False, impl: str = "auto"):
+    """Merge-based SpGEMM using the SparseZipper primitives.
+
+    R: chunk width (paper: 16; TPU-native: 128).
+    S: lock-step stream count per kernel issue (>= R groups batched into one
+       dispatch is allowed — stream semantics are independent — and models a
+       multi-issue matrix unit; default 32*R).
+    rsort: pre-sort row indices by per-row work (spz-rsort).
+    Returns (CSR, SpzStats)."""
+    import time as _time
+    S = S or 32 * R
+    stats = SpzStats()
+    t0 = _time.perf_counter()
+    a_indptr, a_idx, a_val = csr_to_numpy(A)
+    b_indptr, b_idx, b_val = csr_to_numpy(B)
+    order = np.arange(A.n_rows)
+    if rsort:
+        order = np.argsort(row_work(A, B), kind="stable")
+    stats.t_preprocess = _time.perf_counter() - t0
+    out_rows_k = [None] * A.n_rows
+    out_rows_v = [None] * A.n_rows
+    for g0 in range(0, A.n_rows, S):
+        rows = order[g0:g0 + S]
+        Sg = len(rows)
+        t1 = _time.perf_counter()
+        products = _expand_group(rows, a_indptr, a_idx, a_val,
+                                 b_indptr, b_idx, b_val)
+        t2 = _time.perf_counter()
+        stats.t_expand += t2 - t1
+        parts = _sort_phase(products, R, Sg, impl, stats)
+        # zip-merge tree: halve partition count per round, lock-step
+        while len(parts) > 1:
+            nxt = []
+            for j in range(0, len(parts) - 1, 2):
+                nxt.append(_merge_round(parts[j], parts[j + 1], R, impl,
+                                        stats))
+            if len(parts) % 2:
+                nxt.append(parts[-1])
+            parts = nxt
+        stats.t_sort += _time.perf_counter() - t2
+        if parts:
+            Kf, Vf, lf = parts[0]
+            for s, i in enumerate(rows):
+                out_rows_k[i] = Kf[s, :lf[s]]
+                out_rows_v[i] = Vf[s, :lf[s]]
+        else:
+            for i in rows:
+                out_rows_k[i] = np.empty(0, np.int32)
+                out_rows_v[i] = np.empty(0, np.float32)
+    t3 = _time.perf_counter()
+    rr, cc, vv = [], [], []
+    for i in range(A.n_rows):
+        k, v = out_rows_k[i], out_rows_v[i]
+        nz = v != 0.0
+        rr.append(np.full(int(nz.sum()), i, np.int64))
+        cc.append(k[nz])
+        vv.append(v[nz])
+    out = csr_from_coo(np.concatenate(rr), np.concatenate(cc),
+                       np.concatenate(vv), (A.n_rows, B.n_cols))
+    stats.t_output = _time.perf_counter() - t3
+    return out, stats
+
+
+def spgemm(A: CSR, B: CSR, method: str = "spz", **kw):
+    """Dispatch front-end."""
+    if method == "scl-array":
+        return spgemm_scl_array(A, B)
+    if method == "scl-hash":
+        return spgemm_scl_hash(A, B)
+    if method == "esc":
+        return spgemm_esc(A, B, **kw)
+    if method == "spz":
+        return spgemm_spz(A, B, **kw)[0]
+    if method == "spz-rsort":
+        return spgemm_spz(A, B, rsort=True, **kw)[0]
+    raise ValueError(f"unknown method {method}")

@@ -1,0 +1,62 @@
+"""Key-value stream API over the zipper kernels.
+
+A *stream* is a sorted-or-unsorted sequence of (key, value) tuples — in
+SpGEMM, the expanded partial products of one output row. The SparseZipper
+ISA processes R-wide chunks of up to S streams in lock step (one stream per
+matrix-register row). This module provides the chunk-level API (thin
+wrappers over kernels/ops.py) plus host-side helpers to marshal ragged
+numpy streams into (S, R) chunk fronts and back — the role the indexed
+matrix load/store instructions (mlxe.t / msxe.t) play in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.formats import EMPTY
+from repro.kernels import ops
+
+
+def sort_chunks(keys, vals, lens, *, impl="auto"):
+    """mssortk+mssortv over S lock-step streams."""
+    return ops.stream_sort(jnp.asarray(keys), jnp.asarray(vals),
+                           jnp.asarray(lens), impl=impl)
+
+
+def merge_chunks(ka, va, la, kb, vb, lb, *, impl="auto"):
+    """mszipk+mszipv over S lock-step streams."""
+    return ops.stream_merge(jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
+                            jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
+                            impl=impl)
+
+
+def gather_chunk_fronts(parts_k, parts_v, ptrs, R):
+    """Build an (S, R) chunk front from ragged numpy partitions.
+
+    parts_k/parts_v: per-stream numpy arrays; ptrs: per-stream read offsets.
+    Returns (keys, vals, lens) numpy arrays — the mlxe.t analogue."""
+    S = len(parts_k)
+    keys = np.full((S, R), EMPTY, np.int32)
+    vals = np.zeros((S, R), np.float32)
+    lens = np.zeros(S, np.int32)
+    for s in range(S):
+        k = parts_k[s]
+        p = int(ptrs[s])
+        n = min(R, len(k) - p)
+        if n > 0:
+            keys[s, :n] = k[p:p + n]
+            vals[s, :n] = parts_v[s][p:p + n]
+            lens[s] = n
+    return keys, vals, lens
+
+
+def scatter_chunk_outputs(out_k, out_v, dst_k, dst_v, dst_ptrs, out_lens):
+    """Append per-stream valid outputs to destination buffers — the msxe.t
+    analogue. out_k/out_v: (S, W) numpy; dst_*: per-stream numpy buffers."""
+    for s in range(len(dst_k)):
+        n = int(out_lens[s])
+        if n > 0:
+            p = int(dst_ptrs[s])
+            dst_k[s][p:p + n] = out_k[s, :n]
+            dst_v[s][p:p + n] = out_v[s, :n]
+            dst_ptrs[s] = p + n

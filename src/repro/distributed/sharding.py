@@ -1,0 +1,179 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Mesh axes (launch/mesh.py):
+  pod    — data-parallel across pods (multi-pod mesh only)
+  data   — data-parallel / FSDP(ZeRO) within a pod
+  model  — tensor/expert parallel
+
+Activations: batch -> (pod, data); model internals -> model.
+Parameters: TP dims -> model; when cfg.fsdp, the non-TP dim additionally
+shards over data (ZeRO-3 style, gathered on use by GSPMD).
+
+A module-level mesh context makes ``constrain`` a no-op in single-device
+smoke tests while giving GSPMD full placement information in the
+production dry-run/launchers.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH = prev
+
+
+def batch_axes():
+    """Mesh axes the global batch shards over (('pod','data') or ('data',))."""
+    if _MESH is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
+
+
+def data_axis_size() -> int:
+    if _MESH is None:
+        return 1
+    s = 1
+    for a in batch_axes():
+        s *= _MESH.shape[a]
+    return s
+
+
+def model_axis_size() -> int:
+    if _MESH is None:
+        return 1
+    return _MESH.shape.get("model", 1)
+
+
+def _axis_size(a) -> int:
+    s = 1
+    for name in ([a] if isinstance(a, str) else a):
+        s *= _MESH.shape.get(name, 1)
+    return s
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to identity without a mesh and
+    silently drops axes that do not divide the dimension (e.g. batch=1
+    decode shapes leave the data axes idle)."""
+    if _MESH is None:
+        return x
+    clean = tuple(
+        (a if a is None or x.shape[i] % _axis_size(a) == 0 else None)
+        for i, a in enumerate(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*clean)))
+
+
+def constrain_batch(x, *rest):
+    """Shard leading (batch) dim over the data axes."""
+    if _MESH is None:
+        return x
+    return constrain(x, batch_axes() or None, *rest)
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning rules
+# ---------------------------------------------------------------------------
+
+# (path regex, spec builder). ``f`` is the FSDP axis ('data' or None).
+_RULES = [
+    (r"embed/w$",        lambda f: ("model", f)),            # (V, D)
+    (r"lm_head/w$",      lambda f: (f, "model")),            # (D, V)
+    (r"(wq|wk|wv)/w$",   lambda f: (f, "model", None)),      # (D, H, hd)
+    (r"(wq|wk|wv)/b$",   lambda f: ("model", None)),         # (H, hd)
+    (r"wo/w$",           lambda f: ("model", None, f)),      # (H, hd, D)
+    (r"(w1|w3)/w$",      lambda f: (f, "model")),            # (D, F)
+    (r"w2/w$",           lambda f: ("model", f)),            # (F, D)
+    (r"experts/(w1|w3)$", lambda f: ("model", f, None)),     # (E, D, F)
+    (r"experts/w2$",     lambda f: ("model", None, f)),      # (E, F, D)
+    (r"router/w$",       lambda f: (f, None)),               # (D, E)
+    # MLA
+    (r"w_dq/w$",         lambda f: (f, None)),               # (D, q_lora)
+    (r"w_dkv/w$",        lambda f: (f, None)),               # (D, r+rope)
+    (r"w_uq/w$",         lambda f: (None, "model", None)),   # (q_lora, H, d)
+    (r"(w_uk|w_uv)/w$",  lambda f: (None, "model", None)),   # (r, H, d)
+    # SSM / RG-LRU
+    (r"in_proj/w$",      lambda f: (f, "model")),            # (D, inner)
+    (r"out_proj/w$",     lambda f: ("model", f)),            # (inner, D)
+    (r"conv/w$",         lambda f: (None, "model")),         # (k, inner)
+    (r"(a_param|dt_bias|d_skip)$", lambda f: ("model",)),    # per head/channel
+    (r"(a_gate|x_gate)/w$", lambda f: (f, "model")),
+    # norms, scalars, everything 1-D: replicate
+]
+
+
+def param_spec(path: str, shape, fsdp: bool) -> P:
+    f = "data" if fsdp else None
+    if _MESH is not None and "data" not in _MESH.axis_names:
+        f = None
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            spec = fn(f)
+            spec = spec + (None,) * (len(shape) - len(spec))
+            # drop axes that would overshard tiny dims
+            spec = tuple(
+                (a if a is None or (_MESH is not None and
+                                    shape[i] % _MESH.shape[a] == 0) else None)
+                for i, a in enumerate(spec))
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+_STACKED_RE = re.compile(r"^(g\d+|enc_g)$")
+
+
+def param_shardings(params_shape, fsdp: bool):
+    """Pytree of NamedShardings for a params pytree (of ShapeDtypeStructs or
+    arrays). Parameters under a stacked-scan group (g<i>/enc_g) get a
+    leading replicated repeat axis."""
+    assert _MESH is not None, "set a mesh first"
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = bool(_STACKED_RE.match(ps.split("/")[0]))
+        if stacked and len(shape) >= 1:
+            spec = param_spec(ps, shape[1:], fsdp)
+            spec = P(None, *spec)
+        else:
+            spec = param_spec(ps, shape, fsdp)
+        return NamedSharding(_MESH, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

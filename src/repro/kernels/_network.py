@@ -1,0 +1,154 @@
+"""TPU-native building blocks shared by the zipper kernels.
+
+The paper routes keys through a 16x16 systolic array of compare-and-route
+PEs in two passes (sort/merge, then compress). On TPU the equivalent
+data-parallel structures are:
+
+  * compare-exchange networks over the 128-wide lane dimension, where the
+    XOR-partner shuffle at stride j is a reshape+reverse (no gather);
+  * log-step Hillis-Steele scans for duplicate accumulation / prefix sums;
+  * a one-hot matmul for the compress pass — we re-use the matrix unit to
+    apply the routing permutation, the direct analogue of SparseZipper
+    re-using the dense-GEMM systolic array for data routing. Keys are
+    split into two 16-bit halves so the f32 matmul is exact.
+
+All helpers are pure jnp on (S, W) tiles and run unchanged inside Pallas
+kernel bodies (interpret=True on CPU, MXU/VPU lowering on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMPTY
+
+
+def xor_shuffle(x, j):
+    """Exchange lane groups: out[..., i] = x[..., i ^ j] (j power of two)."""
+    W = x.shape[-1]
+    lead = x.shape[:-1]
+    y = x.reshape(*lead, W // (2 * j), 2, j)
+    y = jnp.flip(y, axis=-2)
+    return y.reshape(*lead, W)
+
+
+def _lane_iota(shape):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dimension=len(shape) - 1)
+
+
+def _compare_exchange(keys, carried, j, asc):
+    """One compare-exchange stage at stride j. ``asc`` is a bool array
+    (per lane) giving the sort direction of each bitonic block."""
+    idx = _lane_iota(keys.shape)
+    is_lower = (idx & j) == 0
+    pk = xor_shuffle(keys, j)
+    gt, lt = keys > pk, keys < pk
+    take_partner = jnp.where(asc, jnp.where(is_lower, gt, lt),
+                             jnp.where(is_lower, lt, gt))
+    new_keys = jnp.where(take_partner, pk, keys)
+    new_carried = [jnp.where(take_partner, xor_shuffle(c, j), c) for c in carried]
+    return new_keys, new_carried
+
+
+def bitonic_sort(keys, *carried):
+    """Full ascending bitonic sort of each row; carried arrays follow keys."""
+    W = keys.shape[-1]
+    carried = list(carried)
+    idx = _lane_iota(keys.shape)
+    k = 2
+    while k <= W:
+        asc = (idx & k) == 0  # at k == W this is all-True (idx < W)
+        j = k // 2
+        while j >= 1:
+            keys, carried = _compare_exchange(keys, carried, j, asc)
+            j //= 2
+        k *= 2
+    return (keys, *carried)
+
+
+def bitonic_merge(keys, *carried):
+    """Sort a bitonic row (ascending prefix + descending suffix) ascending.
+    This is the cheap log(W)-stage network the mszip instructions exploit:
+    both inputs are already sorted."""
+    W = keys.shape[-1]
+    carried = list(carried)
+    asc = jnp.ones(keys.shape, bool)
+    j = W // 2
+    while j >= 1:
+        keys, carried = _compare_exchange(keys, carried, j, asc)
+        j //= 2
+    return (keys, *carried)
+
+
+def shift_right(x, d, fill):
+    """Lane-shift right by d with fill (x[..., i] <- x[..., i-d])."""
+    pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)
+    return jnp.concatenate([pad, x[..., :-d]], axis=-1)
+
+
+def shift_left(x, d, fill):
+    pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)
+    return jnp.concatenate([x[..., d:], pad], axis=-1)
+
+
+def segmented_run_sum(keys, vals):
+    """Inclusive segmented scan: vals summed within runs of equal keys.
+    Returns scan such that the LAST lane of each run holds the run total."""
+    W = keys.shape[-1]
+    flag = (keys == shift_right(keys, 1, -1)) & (keys != EMPTY)
+    v = vals
+    d = 1
+    while d < W:
+        v = v + jnp.where(flag, shift_right(v, d, 0), 0)
+        flag = flag & shift_right(flag, d, False)
+        d *= 2
+    return v
+
+
+def lane_cumsum(x):
+    """Inclusive prefix sum along lanes via log-step shifts (int32)."""
+    W = x.shape[-1]
+    s = x
+    d = 1
+    while d < W:
+        s = s + shift_right(s, d, 0)
+        d *= 2
+    return s
+
+
+def combine_duplicates(keys, vals):
+    """After an ascending sort: accumulate duplicate keys onto the last
+    element of each run; earlier elements become EMPTY/0 ("d" outputs in
+    the paper's sort pass)."""
+    totals = segmented_run_sum(keys, vals)
+    is_last = (keys != shift_left(keys, 1, -1)) & (keys != EMPTY)
+    k = jnp.where(is_last, keys, EMPTY)
+    v = jnp.where(is_last, totals, 0)
+    return k, v
+
+
+def compress_onehot(keys, vals, out_width=None):
+    """Compress pass: route valid (key, val) lanes to the front, preserving
+    order, using one-hot matmuls (the MXU plays the systolic array's
+    routing role). Exact for keys < 2**31 via 16-bit split.
+
+    Returns (keys_out, vals_out, n_valid) with keys_out width ``out_width``
+    (default: same as input)."""
+    W = keys.shape[-1]
+    out_w = out_width or W
+    valid = keys != EMPTY
+    pos = lane_cumsum(valid.astype(jnp.int32)) - 1  # destination lane
+    pos = jnp.where(valid, pos, out_w)  # park invalid out of range
+    dest = _lane_iota(keys.shape[:-1] + (out_w,))
+    onehot = (pos[..., :, None] == dest[..., None, :]).astype(jnp.float32)
+    k_hi = jnp.right_shift(keys, 16).astype(jnp.float32)
+    k_lo = jnp.bitwise_and(keys, 0xFFFF).astype(jnp.float32)
+    hit = jnp.einsum("...sw,...swp->...sp", jnp.ones_like(k_hi), onehot)
+    o_hi = jnp.einsum("...sw,...swp->...sp", k_hi, onehot)
+    o_lo = jnp.einsum("...sw,...swp->...sp", k_lo, onehot)
+    o_v = jnp.einsum("...sw,...swp->...sp", vals.astype(jnp.float32), onehot)
+    keys_out = jnp.left_shift(o_hi.astype(jnp.int32), 16) | o_lo.astype(jnp.int32)
+    keys_out = jnp.where(hit > 0, keys_out, EMPTY)
+    vals_out = jnp.where(hit > 0, o_v, 0).astype(vals.dtype)
+    n_valid = jnp.sum(valid, axis=-1, dtype=jnp.int32)
+    return keys_out, vals_out, n_valid

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blocked causal/windowed GQA flash attention.
+
+The training/prefill hot spot. Grid (batch*heads, q_blocks, kv_blocks) with
+kv innermost; online-softmax running state (m, l, acc) lives in VMEM
+scratch across kv steps; causal/window block skipping is done with
+pl.when so skipped tiles cost control flow only. Oracle: ref.mha_ref.
+
+Layout: q is reshaped to (B*H, Sq, hd) and k/v to (B*KVH, Skv, hd) by the
+wrapper; the k/v BlockSpec index map folds the GQA head mapping
+(kv row = batch*KVH + q_head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, bq, bk, nk, sq, skv):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_end = iq * bq + bq - 1 + (skv - sq)   # global pos of last q in block
+    k_start = ik * bk
+    run_pred = (k_start <= q_end) if causal else (ik >= 0)
+
+    @pl.when(run_pred)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)        # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)        # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + (skv - sq)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret", "scale"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, bq=128,
+                           bk=128, scale=None, interpret=True):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sqp, Skp = Sq + pad_q, Skv + pad_k
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sqp, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KVH, Skp, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KVH, Skp, hd)
+    nq, nk = Sqp // bq, Skp // bk
+
+    kv_row = lambda bh: (bh // H) * KVH + (bh % H) // G
+
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk, sq=Sq,
+                          skv=Skv),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, Sqp, hd).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: grouped (per-expert) matmul — the MoE FFN hot spot.
+
+Rows of x are grouped by expert (zipper-sorted upstream: group g owns rows
+[offsets[g], offsets[g+1])). Each row tile multiplies only its expert's
+weight tile; the tile -> expert map is a scalar-prefetch operand so the
+weight BlockSpec index_map can select the right expert block (the
+MegaBlocks trick, TPU-style). Rows past the last group are zeroed.
+
+Restriction (documented): group boundaries are rounded to the row-tile
+size by the caller (capacity-padded zipper dispatch guarantees this —
+capacities are multiples of 8 and padded rows multiply by zero weights).
+Oracle: ref.grouped_matmul_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(tile_gid_ref, x_ref, w_ref, o_ref, *, bt):
+    t = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)          # (bt, D)
+    w = w_ref[0].astype(jnp.float32)            # (D, F)
+    valid = tile_gid_ref[t] >= 0
+    out = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(valid, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def grouped_matmul_pallas(x, w, group_sizes, *, bt: int = 8,
+                          interpret: bool = True):
+    """x: (T, D) rows grouped by expert; w: (E, D, F);
+    group_sizes: (E,) int32 (sum <= T, each a multiple of bt).
+    Returns (T, F)."""
+    T, D = x.shape
+    E, _, F = w.shape
+    pad = (-T) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = T + pad
+    nt = Tp // bt
+    # tile -> expert id (-1 for tiles past the last group)
+    ends = jnp.cumsum(group_sizes)
+    tile_starts = jnp.arange(nt, dtype=jnp.int32) * bt
+    gid = jnp.searchsorted(ends, tile_starts, side="right").astype(jnp.int32)
+    tile_gid = jnp.where(tile_starts < ends[-1], gid, -1)
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, bt=bt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nt,),
+            in_specs=[
+                pl.BlockSpec((bt, D), lambda t, gids: (t, 0)),
+                pl.BlockSpec((1, D, F),
+                             lambda t, gids: (jnp.maximum(gids[t], 0), 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, F), lambda t, gids: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Tp, F), x.dtype),
+        interpret=interpret,
+    )(tile_gid, x, w)
+    return out[:T]

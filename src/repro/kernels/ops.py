@@ -1,0 +1,76 @@
+"""Public jit'd wrappers over the Pallas kernels with impl selection.
+
+``impl``:
+  "pallas" — pl.pallas_call (interpret=True automatically off-TPU)
+  "xla"    — the pure-jnp oracle (ref.py), used for GSPMD dry-runs where
+             the model graph must lower for a 512-device CPU mesh
+  "auto"   — pallas on TPU, xla elsewhere (kernels are still exercised in
+             interpret mode by the test/benchmark suites)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.stream_sort import stream_sort_pallas
+from repro.kernels.stream_merge import stream_merge_pallas
+
+# jitted oracles: the xla impl is used as a driver workhorse (SpGEMM chunk
+# loops), where eager dispatch of the vmap/segment_sum graph would dominate
+_sort_ref = jax.jit(ref.stream_sort_ref)
+_merge_ref = jax.jit(ref.stream_merge_ref)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def stream_sort(keys, vals, lens, *, impl: str = "auto", block_s: int = 8):
+    """mssortk+mssortv: sort/combine/compress S key-value chunks."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return stream_sort_pallas(keys, vals, lens, block_s=block_s,
+                                  interpret=not _on_tpu())
+    return _sort_ref(keys, vals, lens)
+
+
+def stream_merge(ka, va, la, kb, vb, lb, *, impl: str = "auto",
+                 block_s: int = 8):
+    """mszipk+mszipv: merge two sorted chunks per stream."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return stream_merge_pallas(ka, va, la, kb, vb, lb, block_s=block_s,
+                                   interpret=not _on_tpu())
+    return _merge_ref(ka, va, la, kb, vb, lb)
+
+
+def sort_tokens_by_key(keys, *, impl: str = "auto"):
+    """Zipper-dispatch helper used by the MoE layer: ascending argsort of a
+    1-D key vector, implemented as a stream sort whose values are slot ids.
+
+    Unlike stream_sort, duplicates are kept (each key is made unique by
+    packing the slot id into the low bits), because MoE dispatch must not
+    merge tokens routed to the same expert — it only needs them grouped.
+    Returns (sorted_keys, perm) such that keys[perm] == sorted_keys.
+    """
+    (n,) = keys.shape
+    bits = max(1, (n - 1).bit_length())
+    slot = jnp.arange(n, dtype=jnp.int32)
+    packed = (keys.astype(jnp.int32) << bits) | slot
+    impl = _resolve(impl)
+    if impl == "pallas" and n & (n - 1) == 0 and n >= 8:
+        vals = slot.astype(jnp.float32)
+        pk, pv, _ = stream_sort_pallas(packed[None, :], vals[None, :],
+                                       jnp.array([n], jnp.int32),
+                                       interpret=not _on_tpu())
+        perm = pv[0].astype(jnp.int32)
+        return pk[0] >> bits, perm
+    order = jnp.argsort(packed)
+    return keys[order], order.astype(jnp.int32)

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Semantics mirror the SparseZipper ISA (paper §III):
+
+``stream_sort_ref``  == mssortk.tt + mssortv.tt
+    Sort each stream's key chunk ascending, accumulate values of duplicate
+    keys, compress valid tuples to the front. Returns output lengths
+    (the OC counter registers).
+
+``stream_merge_ref`` == mszipk.tt + mszipv.tt
+    Two-way merge of two *sorted, duplicate-free* chunks per stream.
+    Keys greater than every key on the other side are "unmergeable"
+    (paper: merge bit never set) and are NOT emitted; the per-side consumed
+    counts (the IC counter registers) tell the driver how far each input
+    partition advanced. Output is a sorted duplicate-accumulated chunk of
+    up to 2R tuples, split into a low half and a high half (paper: east- and
+    south-side outputs).
+
+Keys are int32 in [0, 2**31-2]; EMPTY = INT32_MAX is the invalid sentinel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMPTY
+
+
+def _mask_chunk(keys, vals, lens):
+    """Invalidate positions >= lens (per stream)."""
+    r = jnp.arange(keys.shape[-1], dtype=jnp.int32)
+    valid = r[None, :] < lens[:, None]
+    return jnp.where(valid, keys, EMPTY), jnp.where(valid, vals, 0)
+
+
+def _sort_combine_compress(keys, vals):
+    """Shared tail: sort by key, accumulate duplicate keys, compress.
+
+    keys: (S, W) int32 (EMPTY = invalid), vals: (S, W) float.
+    Returns (keys, vals, out_lens) with uniques packed at the front.
+    """
+    order = jnp.argsort(keys, axis=-1)
+    k = jnp.take_along_axis(keys, order, axis=-1)
+    v = jnp.take_along_axis(vals, order, axis=-1)
+    # accumulate duplicates onto the LAST element of each equal-key run
+    prev = jnp.concatenate([jnp.full_like(k[:, :1], EMPTY), k[:, :-1]], axis=-1)
+    nxt = jnp.concatenate([k[:, 1:], jnp.full_like(k[:, :1], EMPTY)], axis=-1)
+    seg_start = (k != prev).astype(jnp.int32)
+    seg_id = jnp.cumsum(seg_start, axis=-1) - 1
+    acc = jax.vmap(
+        lambda vv, ss: jax.ops.segment_sum(vv, ss, num_segments=k.shape[-1])
+    )(v, seg_id)
+    run_total = jnp.take_along_axis(acc, seg_id, axis=-1)
+    is_last = (k != nxt) & (k != EMPTY)
+    k2 = jnp.where(is_last, k, EMPTY)
+    v2 = jnp.where(is_last, run_total, 0)
+    # compress: stable re-sort sends EMPTY to the back, keeps uniques ordered
+    order2 = jnp.argsort(k2, axis=-1, stable=True)
+    k3 = jnp.take_along_axis(k2, order2, axis=-1)
+    v3 = jnp.take_along_axis(v2, order2, axis=-1)
+    out_lens = jnp.sum(k3 != EMPTY, axis=-1, dtype=jnp.int32)
+    return k3, v3.astype(vals.dtype), out_lens
+
+
+def stream_sort_ref(keys, vals, lens):
+    """Sort + combine + compress key-value chunks across S streams.
+
+    keys: (S, R) int32, vals: (S, R) float, lens: (S,) int32.
+    Returns (out_keys (S,R), out_vals (S,R), out_lens (S,)).
+    """
+    k, v = _mask_chunk(keys, vals, lens)
+    return _sort_combine_compress(k, v)
+
+
+def stream_merge_ref(ka, va, la, kb, vb, lb):
+    """Merge two sorted duplicate-free chunks per stream.
+
+    Returns (k_lo, v_lo, k_hi, v_hi, consumed_a, consumed_b, out_lens)
+    where (k_lo|k_hi) is the packed sorted merged output of length
+    out_lens <= 2R, consumed_* are per-side advanced counts.
+    """
+    R = ka.shape[-1]
+    ka_m, va_m = _mask_chunk(ka, va, la)
+    kb_m, vb_m = _mask_chunk(kb, vb, lb)
+    # max valid key per side; -1 when the side is empty
+    max_a = jnp.max(jnp.where(ka_m != EMPTY, ka_m, -1), axis=-1)
+    max_b = jnp.max(jnp.where(kb_m != EMPTY, kb_m, -1), axis=-1)
+    cutoff = jnp.minimum(max_a, max_b)  # unmergeable beyond this
+    merge_a = (ka_m != EMPTY) & (ka_m <= cutoff[:, None])
+    merge_b = (kb_m != EMPTY) & (kb_m <= cutoff[:, None])
+    consumed_a = jnp.sum(merge_a, axis=-1, dtype=jnp.int32)
+    consumed_b = jnp.sum(merge_b, axis=-1, dtype=jnp.int32)
+    cat_k = jnp.concatenate(
+        [jnp.where(merge_a, ka_m, EMPTY), jnp.where(merge_b, kb_m, EMPTY)], axis=-1)
+    cat_v = jnp.concatenate(
+        [jnp.where(merge_a, va_m, 0), jnp.where(merge_b, vb_m, 0)], axis=-1)
+    k, v, out_lens = _sort_combine_compress(cat_k, cat_v)
+    return k[:, :R], v[:, :R], k[:, R:], v[:, R:], consumed_a, consumed_b, out_lens
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (used by kernels/flash_attention.py tests)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KVH, D). GQA by head broadcast."""
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    Sk = k.shape[1]
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window:
+        mask &= qi - ki < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# grouped (per-expert) matmul oracle
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(x, w, group_sizes):
+    """x: (T, D) rows grouped by expert (group g owns rows
+    [cum[g], cum[g]+group_sizes[g])); w: (E, D, F). Rows beyond the last
+    group are zeroed. Returns (T, F)."""
+    T = x.shape[0]
+    E = w.shape[0]
+    cum = jnp.cumsum(group_sizes)
+    starts = cum - group_sizes
+    row = jnp.arange(T)
+    gid = jnp.searchsorted(cum, row, side="right").clip(0, E - 1)
+    valid = row < cum[-1]
+    wg = w[gid]
+    out = jnp.einsum("td,tdf->tf", x, wg)
+    return jnp.where(valid[:, None], out, 0)

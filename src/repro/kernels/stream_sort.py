@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: mssortk.tt + mssortv.tt (fused).
+
+Sorts S independent key-value chunks (one per sublane row, the analogue of
+one stream per tile-register row), accumulates duplicate keys, and
+compresses valid tuples to the front — the paper's two-pass systolic
+execution mapped onto VPU compare-exchange networks plus an MXU one-hot
+routing matmul (see kernels/_network.py).
+
+Grid: one program per block of S_BLK streams. The whole (S_BLK, R) tile of
+keys and values lives in VMEM; R <= 512 and S_BLK * R * (4+4+4+4) bytes per
+tile keeps the working set well under the ~16 MB VMEM budget (default
+8 x 128 tile = 16 KB keys + 16 KB values + one (8,128,128) f32 routing
+one-hot = 512 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import EMPTY
+from repro.kernels import _network as net
+
+
+def _stream_sort_kernel(keys_ref, vals_ref, lens_ref,
+                        ok_ref, ov_ref, ol_ref):
+    keys = keys_ref[...]
+    vals = vals_ref[...].astype(jnp.float32)
+    lens = lens_ref[...]  # (S_BLK, 1)
+    r = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    valid = r < lens
+    keys = jnp.where(valid, keys, EMPTY)
+    vals = jnp.where(valid, vals, 0.0)
+    # pass 1: sort (the mssortk systolic sort pass)
+    keys, vals = net.bitonic_sort(keys, vals)
+    # combine duplicates (the paper's C-state PEs)
+    keys, vals = net.combine_duplicates(keys, vals)
+    # pass 2: compress (valid tuples to the front, MXU routing)
+    keys, vals, n = net.compress_onehot(keys, vals)
+    ok_ref[...] = keys
+    ov_ref[...] = vals.astype(ov_ref.dtype)
+    ol_ref[...] = n[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def stream_sort_pallas(keys, vals, lens, *, block_s: int = 8,
+                       interpret: bool = True):
+    """keys: (S, R) int32; vals: (S, R) float; lens: (S,) int32.
+    Returns (out_keys, out_vals, out_lens). R must be a power of two."""
+    S, R = keys.shape
+    assert R & (R - 1) == 0, "R must be a power of two"
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=EMPTY)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        lens = jnp.pad(lens, (0, pad))
+    Sp = S + pad
+    lens2 = lens[:, None].astype(jnp.int32)
+    grid = (Sp // block_s,)
+    kv_spec = pl.BlockSpec((block_s, R), lambda i: (i, 0))
+    len_spec = pl.BlockSpec((block_s, 1), lambda i: (i, 0))
+    ok, ov, ol = pl.pallas_call(
+        _stream_sort_kernel,
+        grid=grid,
+        in_specs=[kv_spec, kv_spec, len_spec],
+        out_specs=[kv_spec, kv_spec, len_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Sp, R), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, R), vals.dtype),
+            jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, vals, lens2)
+    return ok[:S], ov[:S], ol[:S, 0]

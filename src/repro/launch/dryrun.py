@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train / prefill / decode)
+against ShapeDtypeStruct inputs on the production mesh (single-pod 16x16 =
+256 chips, multi-pod 2x16x16 = 512 chips), compiles it, and records:
+
+  * memory_analysis()  — bytes per device (proves the cell fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms,
+  * collective bytes   — parsed from the optimized HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute),
+  * derived roofline terms for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI).
+
+Results append to dryrun_results.json (idempotent per cell key) so the full
+sweep is resumable.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cb
+from repro.distributed import sharding as shd
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+
+# TPU v5e roofline constants
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip per direction)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in optimized HLO."""
+    sizes = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+             "all-to-all": 0, "collective-permute": 0}
+    count = dict.fromkeys(sizes, 0)
+    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2}
+    # lines like: %x = bf16[16,128]{...} all-gather(...)
+    pat = re.compile(
+        r"=\s*\(?\s*((?:\w+\[[\d,]*\][^ ]*(?:,\s*)?)+)\s*\)?\s*"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"[-a-z]*\(")
+    shape_pat = re.compile(r"(\w+)\[([\d,]*)\]")
+    for m in pat.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        total = 0
+        for sm in shape_pat.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dt_bytes.get(dt, 4)
+        sizes[op] += total
+        count[op] += 1
+    return {"bytes": sizes, "counts": count,
+            "total_bytes": sum(sizes.values())}
+
+
+def roofline(cost, coll_bytes_per_dev, n_chips, model_flops,
+             min_bytes_per_chip=0.0):
+    """Three roofline terms + two useful-work fractions.
+
+    roofline_fraction      — FLOPs-based: MODEL_FLOPS time / dominant term
+                             (the train/prefill metric).
+    memory_fraction        — bytes-based: unavoidable bytes (params read
+                             once + cache touched once) / HLO bytes (the
+                             decode metric — decode is inherently
+                             bandwidth-bound, so efficiency = how close HLO
+                             traffic is to the minimum)."""
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = (model_flops / n_chips) / PEAK_FLOPS if model_flops else 0.0
+    return {
+        **terms,
+        "dominant": dom,
+        "step_time_lb_s": bound,
+        "model_flops_per_chip": model_flops / n_chips if model_flops else 0,
+        "hlo_flops_per_chip": flops,
+        "useful_flop_ratio": (model_flops / n_chips / flops) if flops and model_flops else 0.0,
+        "roofline_fraction": useful / bound if bound > 0 else 0.0,
+        "min_bytes_per_chip": min_bytes_per_chip,
+        "memory_fraction": (min_bytes_per_chip / bytes_acc
+                            if bytes_acc else 0.0),
+    }
+
+
+def model_flops_for(cfg, shape):
+    """MODEL_FLOPS per executed step (6·N·D train; 2·N_active·B decode)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def _with_reps(cfg, reps: int, enc_layers=None):
+    """Variant of cfg with the main group repeated ``reps`` times and scans
+    fully unrolled — used for the cost extrapolation (XLA cost_analysis
+    counts while-loop bodies exactly once, so roofline terms are measured
+    on unrolled 1-/2-rep models and scaled: cost(R) = c1 + (R-1)(c2-c1))."""
+    import dataclasses
+    n = len(cfg.group_pattern)
+    nl = len(cfg.tail_pattern) + cfg.first_k_dense + n * reps
+    kw = dict(num_layers=nl, scan_unroll=True)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = enc_layers if enc_layers is not None else 1
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cost_metrics(compiled):
+    cost = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "coll": float(coll["total_bytes"]),
+            "coll_by_op": coll["bytes"],
+            "coll_counts": coll["counts"]}
+
+
+def _extrapolate(m1, m2, reps, menc=None, enc_layers=0):
+    """cost(R) = c1 + (R-1)·(c2-c1) [+ (E-1)·(c_enc2-c1)]."""
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        body = m2[k] - m1[k]
+        total = m1[k] + (reps - 1) * body
+        if menc is not None and enc_layers > 1:
+            total += (enc_layers - 1) * (menc[k] - m1[k])
+        out[k] = max(total, m1[k])
+    out["coll_by_op"] = {
+        op: max(m1["coll_by_op"][op] + (reps - 1) *
+                (m2["coll_by_op"][op] - m1["coll_by_op"][op]) +
+                ((enc_layers - 1) * (menc["coll_by_op"][op] - m1["coll_by_op"][op])
+                 if menc is not None and enc_layers > 1 else 0), 0)
+        for op in m1["coll_by_op"]}
+    return out
+
+
+GRAD_ACCUM = 1  # set by --grad-accum (perf experiments)
+
+
+def _build_compiled(cfg, shape):
+    """Lower + compile one step function under the active mesh."""
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype,
+                                    grad_accum=GRAD_ACCUM)
+        step = st.make_train_step(cfg, opt_cfg)
+        state_shapes = st.train_state_shapes(cfg, opt_cfg)
+        state_sh = st.state_shardings(cfg, state_shapes)
+        batch = st.input_specs(cfg, shape)
+        batch_sh = st.batch_shardings(batch)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+        return jitted.lower(state_shapes, batch).compile()
+    spec = st.input_specs(cfg, shape)
+    params = st.train_state_shapes(cfg, adamw.AdamWConfig())["params"]
+    p_sh = shd.param_shardings(params, cfg.fsdp)
+    c_sh = st.cache_shardings(spec["cache"])
+    if shape.kind == "prefill":
+        step = st.make_prefill_step(cfg)
+        t_sh = st.batch_shardings(
+            {"tokens": spec["tokens"], "enc_inp": spec["enc_inp"]})
+        jitted = jax.jit(step, in_shardings=(
+            p_sh, t_sh["tokens"], c_sh, t_sh["enc_inp"]),
+            donate_argnums=(2,))
+        return jitted.lower(params, spec["tokens"], spec["cache"],
+                            spec["enc_inp"]).compile()
+    step = st.make_decode_step(cfg)
+    t_sh = st.batch_shardings({"token": spec["token"]})
+    jitted = jax.jit(step, in_shardings=(
+        p_sh, t_sh["token"], c_sh, None), donate_argnums=(2,))
+    return jitted.lower(params, spec["token"], spec["cache"],
+                        spec["cache_len"]).compile()
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cfg_override=None, verbose: bool = True):
+    """Lower + compile one cell. Returns the result record."""
+    cfg = cfg_override or cb.get_config(arch)
+    shape = cb.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    with shd.use_mesh(mesh):
+        compiled = _build_compiled(cfg, shape)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        # --- cost: extrapolate from unrolled 1-/2-rep variants (see
+        # _with_reps docstring; scan bodies are cost-counted once) ---
+        main_reps = cfg.groups[0][1]
+        m1 = _cost_metrics(_build_compiled(_with_reps(cfg, 1), shape))
+        m2 = _cost_metrics(_build_compiled(_with_reps(cfg, 2), shape))
+        menc = None
+        if cfg.encoder_layers > 1:
+            menc = _cost_metrics(
+                _build_compiled(_with_reps(cfg, 1, enc_layers=2), shape))
+        ext = _extrapolate(m1, m2, main_reps, menc, cfg.encoder_layers)
+        cost = {"flops": ext["flops"], "bytes accessed": ext["bytes"]}
+        coll = {"total_bytes": ext["coll"], "bytes": ext["coll_by_op"],
+                "counts_1rep": m1["coll_counts"]}
+        mf = model_flops_for(cfg, shape)
+        # unavoidable per-chip traffic: active params once (+ KV cache once
+        # for serve steps; + m/v/params updates for train)
+        pbytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+        if shape.kind == "train":
+            opt_b = 2 * cfg.param_count() * jnp.dtype(cfg.opt_state_dtype).itemsize
+            min_bytes = (3 * pbytes + 3 * opt_b) / n_chips  # fwd+bwd+update
+        else:
+            cache_b = sum(
+                np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(
+                    M.cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                                   enc_len=cfg.num_frontend_tokens)))
+            act_pb = cfg.active_param_count() * jnp.dtype(cfg.param_dtype).itemsize
+            if shape.kind == "prefill":
+                min_bytes = (act_pb + cache_b) / n_chips
+            else:
+                min_bytes = (act_pb * (1 if not cfg.moe else
+                                       min(1.0, shape.global_batch * cfg.top_k
+                                           / max(1, cfg.num_experts)))
+                             + cache_b) / n_chips
+        rl = roofline(cost, coll["total_bytes"], n_chips, mf, min_bytes)
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": n_chips,
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes_per_device": (
+                    getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)),
+            },
+            "cost": {"flops_per_device": cost.get("flops", 0.0),
+                     "bytes_per_device": cost.get("bytes accessed", 0.0)},
+            "collectives": coll,
+            "roofline": rl,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        }
+        if verbose:
+            gb = 1 << 30
+            print(f"[{arch} x {shape_name} @ {rec['mesh']}] "
+                  f"compile {t_compile:.0f}s  "
+                  f"peak {rec['memory']['peak_bytes_per_device']/gb:.2f} GiB/dev  "
+                  f"args {rec['memory']['argument_bytes_per_device']/gb:.2f} GiB  "
+                  f"terms c/m/x = {rl['compute_s']:.4f}/{rl['memory_s']:.4f}/"
+                  f"{rl['collective_s']:.4f}s -> {rl['dominant']} "
+                  f"(roofline frac {rl['roofline_fraction']:.3f})")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="cfg overrides for perf experiments, e.g. "
+                         "attn_block_skip=True,ce_chunk=2048")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result key (perf experiments)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+    global GRAD_ACCUM
+    GRAD_ACCUM = args.grad_accum
+
+    cells = (cb.cells() if args.all
+             else [(cb.norm_id(args.arch), args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    overrides = {}
+    if args.override:
+        import ast
+        import dataclasses as _dc
+        for kv in args.override.split(","):
+            k, v = kv.split("=", 1)
+            try:
+                overrides[k] = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                overrides[k] = v
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = {}
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+            if args.tag:
+                key += f"|{args.tag}"
+            if args.skip_done and key in results:
+                continue
+            try:
+                cfg_ov = None
+                if overrides:
+                    import dataclasses as _dc
+                    cfg_ov = _dc.replace(cb.get_config(arch), **overrides)
+                rec = lower_cell(arch, shape, multi_pod=mp,
+                                 cfg_override=cfg_ov)
+                if args.tag:
+                    rec["tag"] = args.tag
+                    rec["overrides"] = overrides
+                results[key] = rec
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((key, str(e)[:200]))
+                results[key] = {"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "error": str(e)[:500]}
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"\n{len(cells) * len(meshes) - len(failures)} cells OK, "
+          f"{len(failures)} failed")
+    for k, e in failures:
+        print("FAIL", k, e)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

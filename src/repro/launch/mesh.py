@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before the first jax initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """Largest (data, model) mesh on the visible devices (tests, examples)."""
+    n = len(jax.devices())
+    model = model_axis or (4 if n % 4 == 0 and n >= 4 else 1)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])

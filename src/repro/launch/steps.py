@@ -1,0 +1,195 @@
+"""Jittable step functions + their input specs and shardings.
+
+These are the units the dry-run lowers and the launchers execute:
+  train_step   — fwd + loss + grad + AdamW update (+ grad accumulation)
+  prefill_step — prompt -> (first logits, populated KV cache)
+  decode_step  — one token for every sequence in the batch
+"""
+from __future__ import annotations
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.models.model import STACKED_RE
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig):
+    accum = max(1, opt_cfg.grad_accum)
+
+    def loss_fn(params, batch):
+        loss, met = M.loss_fn(params, cfg, batch)
+        return loss, met
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if accum == 1:
+            (loss, met), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            met = {"ce": loss, "aux": jnp.float32(0)}
+        new_params, new_opt, om = adamw.apply_updates(
+            opt_cfg, params, opt, grads)
+        metrics = {"loss": loss, **met, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_state_shapes(cfg, opt_cfg, key=None):
+    params = jax.eval_shape(
+        functools.partial(M.init_params, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt = jax.eval_shape(functools.partial(adamw.init_state, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def init_train_state(cfg, opt_cfg, key):
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": adamw.init_state(opt_cfg, params)}
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg):
+    def prefill_step(params, tokens, cache, enc_inp):
+        return M.prefill(params, cfg, tokens, cache, enc_inp=enc_inp)
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, token, cache, cache_len):
+        return M.decode_step(params, cfg, token, cache, cache_len)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — nothing is allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape):
+    """Batch ShapeDtypeStructs for a ShapeConfig."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sd((B, S), jnp.int32),
+                 "labels": sd((B, S), jnp.int32)}
+        if cfg.num_frontend_tokens:
+            batch["enc_inp"] = sd((B, cfg.num_frontend_tokens, cfg.d_model),
+                                  jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        spec = {"tokens": sd((B, S), jnp.int32),
+                "cache": M.cache_shapes(cfg, B, S,
+                                        enc_len=cfg.num_frontend_tokens),
+                "enc_inp": (sd((B, cfg.num_frontend_tokens, cfg.d_model),
+                               jnp.float32)
+                            if cfg.num_frontend_tokens else None)}
+        return spec
+    if shape.kind == "decode":
+        return {"token": sd((B, 1), jnp.int32),
+                "cache": M.cache_shapes(cfg, B, S,
+                                        enc_len=cfg.num_frontend_tokens),
+                "cache_len": sd((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _nsh(*spec):
+    return NamedSharding(shd.get_mesh(), P(*spec))
+
+
+def batch_shardings(batch):
+    ba = shd.batch_axes() or None
+
+    def one(leaf):
+        if leaf is None:
+            return None
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and ba is not None and \
+                leaf.shape[0] % shd.data_axis_size() == 0:
+            spec[0] = ba
+        return _nsh(*spec)
+
+    return jax.tree_util.tree_map(one, batch,
+                                  is_leaf=lambda x: x is None)
+
+
+_CACHE_RULES = [
+    (r"/(k|v|c|kr|enc_k|enc_v)$", 1),   # sequence dim -> model
+    (r"/slot_pos$", 1),
+    (r"/h$", 1),                         # state width/head dim -> model
+    (r"/conv$", 2),                      # channel dim -> model
+]
+
+
+def cache_shardings(cache_tree):
+    """Seq-dim model sharding for KV caches; state sharding for SSM."""
+    ba = shd.batch_axes() or None
+    msize = shd.model_axis_size()
+    dsize = shd.data_axis_size()
+
+    def one(path, leaf):
+        ps = "/" + "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                            for k in path)
+        stacked = bool(re.match(r"^/g\d+/", ps))
+        off = 1 if stacked else 0
+        spec = [None] * len(leaf.shape)
+        if stacked:
+            spec[0] = None
+        # batch dim
+        bdim = off
+        if ba is not None and leaf.shape[bdim] % dsize == 0:
+            spec[bdim] = ba
+        for pat, dim in _CACHE_RULES:
+            if re.search(pat, ps):
+                d = dim + off
+                if d < len(leaf.shape) and leaf.shape[d] % msize == 0:
+                    spec[d] = "model"
+                break
+        return _nsh(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def state_shardings(cfg, state_shapes):
+    p_sh = shd.param_shardings(state_shapes["params"], cfg.fsdp)
+    return {
+        "params": p_sh,
+        "opt": {
+            "step": _nsh(),
+            "m": jax.tree_util.tree_map(
+                lambda s, ps: ps, state_shapes["opt"]["m"], p_sh),
+            "v": jax.tree_util.tree_map(
+                lambda s, ps: ps, state_shapes["opt"]["v"], p_sh),
+        },
+    }

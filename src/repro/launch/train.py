@@ -1,0 +1,130 @@
+"""Training launcher: mesh + data + resilient loop + checkpoints.
+
+Runs for real on however many devices this host exposes (examples use the
+host mesh); the same builder is lowered against the production mesh by the
+dry-run. Usage:
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import base as cb
+from repro.data.pipeline import PrefetchLoader, TokenDataset
+from repro.distributed import sharding as shd
+from repro.launch import steps as st
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.runtime.fault import FaultConfig, run_resilient
+
+
+def train(cfg, opt_cfg, fcfg: FaultConfig, *, num_steps: int,
+          global_batch: int, seq_len: int, mesh=None, seed: int = 0,
+          preempt_hook=None, log_every: int = 10):
+    mesh = mesh or make_host_mesh()
+    history = []
+    with shd.use_mesh(mesh):
+        step_fn = st.make_train_step(cfg, opt_cfg)
+        state_shapes = st.train_state_shapes(cfg, opt_cfg)
+        state_sh = st.state_shardings(cfg, state_shapes)
+        jstep = jax.jit(step_fn, in_shardings=(state_sh, None),
+                        out_shardings=(state_sh, None), donate_argnums=(0,))
+
+        def fresh_state():
+            init = jax.jit(
+                functools.partial(st.init_train_state, cfg, opt_cfg),
+                out_shardings=state_sh)
+            return init(jax.random.PRNGKey(seed))
+
+        ds = TokenDataset(cfg.vocab_size, seq_len, global_batch, seed=seed,
+                          enc_tokens=cfg.num_frontend_tokens,
+                          d_model=cfg.d_model)
+        loader = PrefetchLoader(ds).start()
+
+        def batch_fn(step):
+            # step-addressable fetch: on restart the prefetcher rewinds to
+            # the restored step so resumed == uninterrupted training
+            nonlocal loader
+            b = next(loader)
+            if b.get("_step") != step:
+                loader.stop()
+                loader = PrefetchLoader(ds).start(step)
+                b = next(loader)
+            return b
+
+        def save_fn(step, state):
+            return ckpt.save(fcfg.ckpt_dir, step, state, keep=fcfg.keep,
+                             blocking=not fcfg.async_save)
+
+        def restore_fn():
+            s = ckpt.latest_step(fcfg.ckpt_dir)
+            if s is None:
+                return None
+            state = ckpt.restore(fcfg.ckpt_dir, state_shapes, step=s,
+                                 shardings=state_sh)
+            return s, state
+
+        def wrapped(state, batch):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()
+                     if not k.startswith("_")}
+            t0 = time.time()
+            state, metrics = jstep(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_s"] = time.time() - t0
+            return state, metrics
+
+        def on_step(step, metrics):
+            history.append(metrics)
+            if step % log_every == 0:
+                print(f"step {step:5d}  loss {metrics['loss']:.4f}  "
+                      f"gnorm {metrics['grad_norm']:.2f}  "
+                      f"{metrics['step_s']*1e3:.0f} ms")
+
+        state = fresh_state()
+        try:
+            state, hist = run_resilient(
+                wrapped, state, batch_fn, fcfg, num_steps=num_steps,
+                save_fn=save_fn, restore_fn=restore_fn,
+                preempt_hook=preempt_hook, on_step=on_step)
+        finally:
+            loader.stop()
+        return state, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    cfg = (cb.get_smoke_config(args.arch) if args.smoke
+           else cb.get_config(args.arch))
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, grad_accum=args.grad_accum,
+                                warmup_steps=max(5, args.steps // 10),
+                                decay_steps=args.steps,
+                                state_dtype=cfg.opt_state_dtype)
+    fcfg = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    _, hist = train(cfg, opt_cfg, fcfg, num_steps=args.steps,
+                    global_batch=args.batch, seq_len=args.seq)
+    losses = [h["loss"] for h in hist["steps"]]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({hist['saves']} saves, {hist['restarts']} restarts)")
+
+
+if __name__ == "__main__":
+    main()

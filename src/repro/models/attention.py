@@ -1,0 +1,335 @@
+"""Attention: GQA (+bias, local windows, cross) and MLA (DeepSeek-V2).
+
+Training/prefill uses a blocked online-softmax attention (flash-style in
+pure lax, memory O(S·block)); an optional static causal block-skip halves
+the FLOPs (hillclimb flag ``attn_block_skip``). Decode attends a KV cache
+whose *sequence* dim is sharded over the model axis — GSPMD turns the
+softmax over the sharded dim into the flash-decode partial-softmax pattern
+(per-shard max/sum + tiny all-reduces), which is how we use 16-way model
+parallelism even when kv_heads < 16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, (cfg.num_heads, hd), dtype,
+                         bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, (cfg.num_kv_heads, hd), dtype,
+                         bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, (cfg.num_kv_heads, hd), dtype,
+                         bias=cfg.qkv_bias),
+        "wo": {"w": (jax.random.normal(ks[3], (cfg.num_heads, hd, cfg.d_model),
+                                       jnp.float32)
+                     * (cfg.num_heads * hd) ** -0.5).astype(dtype)},
+    }
+
+
+def mla_init(key, cfg, dtype):
+    ks = jax.random.split(key, 7)
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, (cfg.num_heads, qk), dtype),
+        "w_dkv": dense_init(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank,
+                           (cfg.num_heads, cfg.qk_nope_dim), dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank,
+                           (cfg.num_heads, cfg.v_head_dim), dtype),
+        "wo": {"w": (jax.random.normal(
+            ks[5], (cfg.num_heads, cfg.v_head_dim, cfg.d_model), jnp.float32)
+            * (cfg.num_heads * cfg.v_head_dim) ** -0.5).astype(dtype)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocked online-softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, qpos, kpos, causal, window, scale, p_bf16=False):
+    """q: (B,qb,H,hd) k/v: (B,kb,KVH,hd) -> partial (acc, m, l)."""
+    B, qb, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, qb, KVH, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones((qb, k.shape[1]), bool)
+    dpos = qpos[:, None] - kpos[None, :]
+    if causal:
+        mask &= dpos >= 0
+    if window:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B,KVH,G,qb)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    if p_bf16:
+        # flash-attention-2 numerics: bf16 probabilities between the
+        # softmax and the PV matmul (halves score-chain traffic)
+        p = p.astype(jnp.bfloat16)
+    acc = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(p.dtype),
+                     preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_block=2048,
+                      kv_block=1024, block_skip=False, q_offset=0,
+                      scale=None, p_bf16=False):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KVH,hd). Returns (B,Sq,H,hd).
+
+    q_offset: global position of q[0] minus position of k[0] (prefill: 0
+    when Sq == Skv; decode chunks: cache_len)."""
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    nq = -(-Sq // qb)
+    nk = -(-Skv // kb)
+    pad_q = nq * qb - Sq
+    pad_k = nk * kb - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos_all = jnp.arange(nk * kb)
+    valid_k = kpos_all < Skv
+
+    def q_block_fn(i, qi):
+        qpos = i * qb + jnp.arange(qb) + q_offset
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, j * kb, kb, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, j * kb, kb, 1)
+            kpos = j * kb + jnp.arange(kb)
+            kpos = jnp.where(jax.lax.dynamic_slice_in_dim(valid_k, j * kb, kb, 0),
+                             kpos, Sq + Skv + 10**9)  # mask padding
+            a2, m2, l2 = _attend_block(qi, ks, vs, qpos, kpos, causal,
+                                       window, scale, p_bf16)
+            mn = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - mn)
+            c2 = jnp.exp(m2 - mn)
+            acc = acc * c1[..., None] + a2 * c2[..., None]
+            l = l * c1 + l2 * c2
+            return (acc, mn, l), None
+
+        G = H // KVH
+        hd_v = v.shape[-1]
+        acc0 = jnp.zeros((B, KVH, G, qb, hd_v), jnp.float32)
+        m0 = jnp.full((B, KVH, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, qb), jnp.float32)
+        if block_skip and causal:
+            # static skip: kv block j only if j*kb <= (i+1)*qb - 1 + offset
+            hi = min(nk, -(-((i + 1) * qb + q_offset) // kb))
+            carry = (acc0, m0, l0)
+            for j in range(hi):
+                carry, _ = kv_step(carry, j)
+            acc, m, l = carry
+        else:
+            (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, KVH * G, qb, hd_v).transpose(0, 2, 1, 3)
+
+    outs = [q_block_fn(i, q[:, i * qb:(i + 1) * qb]) for i in range(nq)]
+    out = jnp.concatenate(outs, axis=1)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, x, pos, cfg, *, causal=True, window=0, kv_override=None):
+    """Full-sequence (train/prefill) GQA. kv_override: encoder states for
+    cross-attention (B, Senc, D)."""
+    q = dense(p["wq"], x)
+    src = kv_override if kv_override is not None else x
+    k = dense(p["wk"], src)
+    v = dense(p["wv"], src)
+    ba = shd.batch_axes() or None
+    if cfg.layer_layout == "sp":
+        # tokens stay model-sharded; K/V (small under GQA) are gathered to
+        # full sequence per device, Q/out keep the sequence sharding
+        q = shd.constrain(q, ba, "model", None, None)
+        k = shd.constrain(k, ba, None, None, None)
+        v = shd.constrain(v, ba, None, None, None)
+    else:
+        q = shd.constrain(q, ba, None, "model", None)
+        k = shd.constrain(k, ba, None, "model" if cfg.num_kv_heads >= shd.model_axis_size() else None, None)
+    if kv_override is None:
+        if cfg.pos_emb == "rope":
+            q = rope(q, pos, cfg.rope_theta)
+            k = rope(k, pos, cfg.rope_theta)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels.flash_attention import flash_attention_pallas
+            out = flash_attention_pallas(
+                q, k, v, causal=causal, window=window,
+                interpret=jax.default_backend() != "tpu")
+        else:
+            out = blocked_attention(q, k, v, causal=causal, window=window,
+                                    q_block=cfg.attn_q_block,
+                                    kv_block=cfg.attn_kv_block,
+                                    block_skip=cfg.attn_block_skip,
+                                    p_bf16=cfg.attn_p_bf16)
+    else:
+        out = blocked_attention(q, k, v, causal=False,
+                                q_block=cfg.attn_q_block,
+                                kv_block=cfg.attn_kv_block)
+    if cfg.layer_layout == "sp":
+        out = shd.constrain(out, ba, "model", None, None)
+    else:
+        out = shd.constrain(out, ba, None, "model", None)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"]["w"].astype(x.dtype))
+
+
+def gqa_decode(p, x, cache_k, cache_v, cache_len, cfg, *, window=0,
+               kv_override=False):
+    """One-token decode. cache_k/v: (B, Smax, KVH, hd) with the sequence dim
+    sharded over the model axis (see module docstring). Returns
+    (out, new_k, new_v)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q = dense(p["wq"], x)
+    if cfg.pos_emb == "rope":
+        q = rope(q, pos, cfg.rope_theta)
+    if not kv_override:
+        k_new = dense(p["wk"], x)
+        if cfg.pos_emb == "rope":
+            k_new = rope(k_new, pos, cfg.rope_theta)
+        v_new = dense(p["wv"], x)
+        Smax = cache_k.shape[1]
+        if cfg.decode_dus:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, k_new.astype(cache_k.dtype), cache_len, 1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, v_new.astype(cache_v.dtype), cache_len, 1)
+        else:
+            onehot = (jnp.arange(Smax) == cache_len).astype(cache_k.dtype)
+            cache_k = cache_k * (1 - onehot)[None, :, None, None] + \
+                k_new.astype(cache_k.dtype) * onehot[None, :, None, None]
+            cache_v = cache_v * (1 - onehot)[None, :, None, None] + \
+                v_new.astype(cache_v.dtype) * onehot[None, :, None, None]
+    ba = shd.batch_axes() or None
+    cache_k = shd.constrain(cache_k, ba, "model", None, None)
+    cache_v = shd.constrain(cache_v, ba, "model", None, None)
+    Smax = cache_k.shape[1]
+    KVH = cache_k.shape[2]
+    G = cfg.num_heads // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * hd ** -0.5
+    kpos = jnp.arange(Smax)
+    valid = kpos <= cache_len if not kv_override else kpos < cache_len
+    if window:
+        valid &= kpos > cache_len - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pbs = jax.nn.softmax(s, axis=-1)  # GSPMD: partial softmax + all-reduce
+    out = jnp.einsum("bkgs,bskd->bkgd", pbs, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bshd,hdo->bso", out, p["wo"]["w"].astype(x.dtype))
+    return y[:, 0:1].reshape(B, 1, -1), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (DeepSeek-V2): compressed KV cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, x, pos, cfg):
+    B, S, D = x.shape
+    cq = rmsnorm(p["q_norm"], dense(p["w_dq"], x), cfg.norm_eps)
+    q = dense(p["w_uq"], cq)  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    dkv = dense(p["w_dkv"], x)
+    c_kv = rmsnorm(p["kv_norm"], dkv[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(dkv[..., None, cfg.kv_lora_rank:], pos, cfg.rope_theta)
+    k_nope = dense(p["w_uk"], c_kv)  # (B,S,H,nope)
+    v = dense(p["w_uv"], c_kv)       # (B,S,H,vd)
+    H = cfg.num_heads
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))],
+                        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ba = shd.batch_axes() or None
+    # MLA-specific layout: the per-head K/V blow-up (H x (nope+rope) per
+    # token) must be head-sharded; the only tensor worth gathering is the
+    # *compressed* c_kv (r + rope per token) — which is the whole point of
+    # MLA. This holds for both tp and sp residual layouts.
+    q_full = shd.constrain(q_full, ba, None, "model", None)
+    k = shd.constrain(k, ba, None, "model", None)
+    v = shd.constrain(v, ba, None, "model", None)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    # pad v head dim up to qk dim for the shared blocked kernel
+    out = blocked_attention(q_full, k, v, causal=True, scale=scale,
+                            q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block,
+                            block_skip=cfg.attn_block_skip,
+                            p_bf16=cfg.attn_p_bf16)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"]["w"].astype(x.dtype))
+
+
+def mla_decode(p, x, cache_c, cache_kr, cache_len, cfg):
+    """Absorbed MLA decode: scores and context in the compressed space.
+    cache_c: (B, Smax, r); cache_kr: (B, Smax, rope)."""
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    cq = rmsnorm(p["q_norm"], dense(p["w_dq"], x), cfg.norm_eps)
+    q = dense(p["w_uq"], cq)[:, 0]  # (B,H,nope+rope)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
+    dkv = dense(p["w_dkv"], x)
+    c_new = rmsnorm(p["kv_norm"], dkv[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    kr_new = rope(dkv[..., None, cfg.kv_lora_rank:], pos,
+                  cfg.rope_theta)[..., 0, :]
+    Smax = cache_c.shape[1]
+    if cfg.decode_dus:
+        cache_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_c, c_new.astype(cache_c.dtype), cache_len, 1)
+        cache_kr = jax.lax.dynamic_update_slice_in_dim(
+            cache_kr, kr_new.astype(cache_kr.dtype), cache_len, 1)
+    else:
+        onehot = (jnp.arange(Smax) == cache_len).astype(cache_c.dtype)
+        cache_c = cache_c * (1 - onehot)[None, :, None] + \
+            c_new[:, 0][:, None] * onehot[None, :, None]
+        cache_kr = cache_kr * (1 - onehot)[None, :, None] + \
+            kr_new[:, 0][:, None] * onehot[None, :, None]
+    ba = shd.batch_axes() or None
+    cache_c = shd.constrain(cache_c, ba, "model", None)
+    cache_kr = shd.constrain(cache_kr, ba, "model", None)
+    # absorb w_uk into q: q' = q_nope @ w_uk^T  -> (B,H,r)
+    qc = jnp.einsum("bhn,rhn->bhr", q_nope, p["w_uk"]["w"].astype(x.dtype))
+    s = jnp.einsum("bhr,bsr->bhs", qc.astype(jnp.float32),
+                   cache_c.astype(jnp.float32))
+    s += jnp.einsum("bhe,bse->bhs", q_rope.astype(jnp.float32),
+                    cache_kr.astype(jnp.float32))
+    s *= (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    valid = jnp.arange(Smax) <= cache_len
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr, cache_c.astype(jnp.float32))
+    v = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype),
+                   p["w_uv"]["w"].astype(x.dtype))
+    y = jnp.einsum("bhv,hvo->bo", v, p["wo"]["w"].astype(x.dtype))
+    return y[:, None], cache_c, cache_kr

@@ -1,0 +1,107 @@
+"""Elementary layers (pure functions over param pytrees; no framework)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, in_dim, out_shape, dtype, *, bias=False, scale=None):
+    """w: (in_dim, *out_shape); fan-in scaled normal init."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    scale = scale if scale is not None else in_dim ** -0.5
+    p = {"w": (jax.random.normal(key, (in_dim, *out_shape), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def dense(p, x, dims=1):
+    """Contract the last ``dims``... here: last axis of x with first of w."""
+    w = p["w"].astype(x.dtype)
+    y = jnp.tensordot(x, w, axes=((x.ndim - 1,), (0,)))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = _split(key, 3)
+    return {"w1": dense_init(k1, d_model, d_ff, dtype),
+            "w3": dense_init(k3, d_model, d_ff, dtype),
+            "w2": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def mlp(p, x, layout="tp"):
+    """SwiGLU MLP. layout='tp': hidden sharded over model (Megatron);
+    layout='sp': tokens stay model-sharded, weights gathered."""
+    h = jax.nn.silu(dense(p["w1"], x)) * dense(p["w3"], x)
+    ba = shd.batch_axes() or None
+    if layout == "sp" and h.ndim == 3:
+        h = shd.constrain(h, ba, "model", None)
+    else:
+        h = shd.constrain(h, *([ba] + [None] * (h.ndim - 2) + ["model"]))
+    return dense(p["w2"], h)
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"w": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                  * d_model ** -0.5).astype(dtype)}
+
+
+def embed_lookup(p, ids, compute_dtype):
+    return p["w"].astype(compute_dtype)[ids]
+
+
+def logits_head(p, x):
+    """x: (B, S, D) -> (B, S, V), vocab sharded over model axis."""
+    y = dense(p, x)
+    return shd.constrain_batch(y, None, "model")
+
+
+def cross_entropy(logits, labels, *, ignore_id=-1):
+    """Stable CE; logits (B,S,V) possibly vocab-sharded (GSPMD handles the
+    partial reductions)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    # label log-prob via a masked reduction over the (model-sharded) vocab
+    # dim — a take_along_axis here would force GSPMD to all-gather logits.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    hit = vocab_iota == labels[..., None].clip(0)
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,272 @@
+"""Model assembly: init / train forward / prefill / decode for any config.
+
+Param tree layout (paths drive the sharding rules):
+  embed/w                     (V, D)
+  enc_g/...                   stacked encoder sublayers (whisper)
+  enc_norm/scale
+  lead{i}/...                 unscanned leading units (deepseek first-dense)
+  g{j}/s{k}/...               stacked groups: repeat-dim-leading params
+  norm/scale
+  lm_head/w                   (D, V)
+"""
+from __future__ import annotations
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.layers import (cross_entropy, embed_init, embed_lookup,
+                                 dense_init, logits_head, rmsnorm,
+                                 rmsnorm_init)
+
+AUX_LOSS_COEF = 0.01
+
+STACKED_RE = re.compile(r"^(g\d+|enc_g)$")
+
+
+def _sinusoid(pos, d, dtype):
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = pos[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _unit_init(key, pattern, cfg, use_moe, causal=True):
+    ks = jax.random.split(key, len(pattern))
+    return {f"s{i}": tf.sublayer_init(ks[i], kind, cfg, use_moe=use_moe)
+            for i, kind in enumerate(pattern)}
+
+
+def init_params(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+         "norm": rmsnorm_init(cfg.d_model, dt),
+         "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)}
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[2], cfg.encoder_layers)
+        p["enc_g"] = jax.vmap(
+            lambda k: _unit_init(k, ("attn",), cfg, use_moe=False))(ek)
+        p["enc_norm"] = rmsnorm_init(cfg.d_model, dt)
+    for i in range(cfg.first_k_dense):
+        p[f"lead{i}"] = _unit_init(jax.random.fold_in(keys[3], i),
+                                   cfg.group_pattern, cfg, use_moe=False)
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        gk = jax.random.split(jax.random.fold_in(keys[4], gi), reps)
+        p[f"g{gi}"] = jax.vmap(
+            lambda k: _unit_init(k, pattern, cfg, use_moe=True))(gk)
+    return p
+
+
+def _groups(cfg):
+    """[(name, pattern, reps), ...] for the decoder stack."""
+    out = []
+    for i in range(cfg.first_k_dense):
+        out.append((f"lead{i}", cfg.group_pattern, None))
+    for gi, (pattern, reps) in enumerate(cfg.groups):
+        out.append((f"g{gi}", pattern, reps))
+    return out
+
+
+def _encode(params, cfg, enc_inp):
+    """Whisper-style encoder over stub frame embeddings (B, Senc, D)."""
+    x = enc_inp.astype(jnp.dtype(cfg.dtype))
+    S = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], x.shape[:2])
+    x = x + _sinusoid(pos, cfg.d_model, x.dtype)
+
+    def body(x, pslice):
+        x, _, _ = tf.sublayer_apply(pslice["s0"], "attn", x, pos, cfg,
+                                    use_moe=False, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_g"], unroll=cfg.scan_unroll)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg, tokens, *, enc_inp=None, pos0=0, cache=None,
+            return_hidden=False):
+    """Full-sequence forward. Returns (logits, aux, cache-or-None)."""
+    cdt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cdt)
+    x = shd.constrain_batch(x, None, None)
+    pos = pos0 + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos_emb == "sinusoid":
+        x = x + _sinusoid(pos, cfg.d_model, cdt)
+    enc = None
+    if cfg.encoder_layers:
+        enc = _encode(params, cfg, enc_inp)
+    elif enc_inp is not None:
+        enc = enc_inp.astype(cdt)
+    aux_total = jnp.float32(0)
+    new_cache = {} if cache is not None else None
+
+    for name, pattern, reps in _groups(cfg):
+        use_moe = not name.startswith("lead")
+        if reps is None:  # unscanned unit
+            aux = jnp.float32(0)
+            c_unit = cache.get(name) if cache is not None else None
+            upd = {}
+            for i, kind in enumerate(pattern):
+                cs = c_unit[f"s{i}"] if c_unit is not None else None
+                x, a, cs2 = tf.sublayer_apply(
+                    params[name][f"s{i}"], kind, x, pos, cfg, enc=enc,
+                    use_moe=use_moe, cache=cs)
+                aux += a
+                if cs2 is not None:
+                    upd[f"s{i}"] = cs2
+            aux_total += aux
+            if cache is not None:
+                new_cache[name] = upd
+            continue
+
+        def unit(x, pslice, cslice):
+            aux = jnp.float32(0)
+            upd = {}
+            for i, kind in enumerate(pattern):
+                cs = cslice[f"s{i}"] if cslice is not None else None
+                x, a, cs2 = tf.sublayer_apply(
+                    pslice[f"s{i}"], kind, x, pos, cfg, enc=enc,
+                    use_moe=use_moe, cache=cs)
+                aux += a
+                upd[f"s{i}"] = cs2
+            return x, aux, upd
+
+        if cfg.remat == "block":
+            unit = jax.checkpoint(unit)
+
+        if cache is not None:
+            def body(x, inp):
+                pslice, cslice = inp
+                x, aux, upd = unit(x, pslice, cslice)
+                return x, (aux, upd)
+            x, (auxs, updc) = jax.lax.scan(body, x,
+                                           (params[name], cache[name]),
+                                           unroll=cfg.scan_unroll)
+            new_cache[name] = updc
+        else:
+            def body(x, pslice):
+                x, aux, _ = unit(x, pslice, None)
+                return x, aux
+            x, auxs = jax.lax.scan(body, x, params[name],
+                                   unroll=cfg.scan_unroll)
+        aux_total += jnp.sum(auxs)
+
+    x = rmsnorm(params["norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total, new_cache
+    logits = logits_head(params["lm_head"], x)
+    return logits, aux_total, new_cache
+
+
+def _chunked_ce(params, cfg, x, labels):
+    """Vocab head + CE in sequence chunks: the (B, Sc, V) logits block (and
+    its f32 softmax temps) never exceeds one chunk; jax.checkpoint makes
+    the backward recompute each chunk's logits instead of saving them."""
+    B, S, D = x.shape
+    C = min(cfg.ce_chunk, S)
+    assert S % C == 0, (S, C)
+    xc = x.reshape(B, S // C, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, S // C, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(x_blk, l_blk):
+        logits = logits_head(params["lm_head"], x_blk)
+        mask = (l_blk != -1).astype(jnp.float32)
+        return cross_entropy(logits, l_blk) * jnp.maximum(mask.sum(), 1.0), \
+            mask.sum()
+
+    def body(carry, inp):
+        tot, cnt = carry
+        s, n = one(*inp)
+        return (tot + s, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg, batch):
+    """batch: {'tokens': (B,S), 'labels': (B,S)} (+ 'enc_inp')."""
+    if cfg.ce_chunk:
+        x, aux, _ = forward(params, cfg, batch["tokens"],
+                            enc_inp=batch.get("enc_inp"),
+                            return_hidden=True)
+        loss = _chunked_ce(params, cfg, x, batch["labels"])
+    else:
+        logits, aux, _ = forward(params, cfg, batch["tokens"],
+                                 enc_inp=batch.get("enc_inp"))
+        loss = cross_entropy(logits, batch["labels"])
+    return loss + AUX_LOSS_COEF * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache shapes / prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg, batch, smax, enc_len=0):
+    out = {}
+    for name, pattern, reps in _groups(cfg):
+        unit = {f"s{i}": tf.sublayer_cache(kind, cfg, batch, smax, enc_len)
+                for i, kind in enumerate(pattern)}
+        if reps is not None:
+            unit = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype),
+                unit)
+        out[name] = unit
+    return out
+
+
+def init_cache(cfg, batch, smax, enc_len=0):
+    return tf.zeros_like_sds(cache_shapes(cfg, batch, smax, enc_len))
+
+
+def prefill(params, cfg, tokens, cache, *, enc_inp=None):
+    """Process the prompt; returns (last-token logits, populated cache)."""
+    logits, _, cache = forward(params, cfg, tokens, enc_inp=enc_inp,
+                               cache=cache)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, token, cache, cache_len, *, enc_inp=None):
+    """token: (B, 1). Returns (logits (B, V), new_cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    B = token.shape[0]
+    x = embed_lookup(params["embed"], token, cdt)
+    if cfg.pos_emb == "sinusoid":
+        pos = jnp.full((B, 1), cache_len, jnp.int32)
+        x = x + _sinusoid(pos, cfg.d_model, cdt)
+    new_cache = {}
+    for name, pattern, reps in _groups(cfg):
+        use_moe = not name.startswith("lead")
+        if reps is None:
+            upd = {}
+            for i, kind in enumerate(pattern):
+                x, cs, _ = tf.sublayer_decode(
+                    params[name][f"s{i}"], kind, x, cache[name][f"s{i}"],
+                    cache_len, cfg, use_moe=use_moe)
+                upd[f"s{i}"] = cs
+            new_cache[name] = upd
+            continue
+
+        def body(x, inp):
+            pslice, cslice = inp
+            upd = {}
+            for i, kind in enumerate(pattern):
+                x, cs, _ = tf.sublayer_decode(
+                    pslice[f"s{i}"], kind, x, cslice[f"s{i}"],
+                    cache_len, cfg, use_moe=use_moe)
+                upd[f"s{i}"] = cs
+            return x, upd
+
+        x, updc = jax.lax.scan(body, x, (params[name], cache[name]),
+                               unroll=cfg.scan_unroll)
+        new_cache[name] = updc
+    x = rmsnorm(params["norm"], x, cfg.norm_eps)
+    logits = logits_head(params["lm_head"], x)
+    return logits[:, -1], new_cache

@@ -1,0 +1,228 @@
+"""State-space blocks: Mamba-2 SSD (chunked state-space duality) and
+RG-LRU (RecurrentGemma/Griffin). Both provide full-sequence (train/prefill)
+and single-step (decode) forms; sub-quadratic in sequence length, so these
+are the archs that run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.layers import dense, dense_init
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w): shared by SSD and RG-LRU branches
+# ---------------------------------------------------------------------------
+
+def conv1d_init(key, width, channels, dtype):
+    return {"w": (jax.random.normal(key, (width, channels), jnp.float32)
+                  * width ** -0.5).astype(dtype)}
+
+
+def conv1d(p, x):
+    """x: (B, S, C) causal depthwise."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def conv1d_step(p, x_t, conv_cache):
+    """x_t: (B, 1, C); conv_cache: (B, width-1, C) past inputs.
+    Returns (y_t, new_cache)."""
+    w = p["w"].astype(x_t.dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([conv_cache, x_t], axis=1)  # (B, width, C)
+    y = jnp.einsum("bwc,wc->bc", window, w)[:, None]
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_init(key, cfg, dtype):
+    D = cfg.d_model
+    inner = cfg.ssm_expand * D
+    H = inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    conv_ch = inner + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * inner + 2 * N + H, dtype),
+        "conv": conv1d_init(ks[1], cfg.conv_width, conv_ch, dtype),
+        "a_param": jnp.zeros((H,), jnp.float32),     # A = -exp(a_param)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[2], inner, D, dtype),
+        "norm": {"scale": jnp.ones((inner,), dtype)},
+    }
+
+
+def _ssd_split(p, x, cfg):
+    D = cfg.d_model
+    inner = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    H = inner // cfg.ssm_head_dim
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner:inner + inner + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt, inner, N, H
+
+
+def ssd_forward(p, x, cfg):
+    """Chunked SSD over the full sequence. x: (B, S, D).
+    Returns (y, final_state (B,H,P,N), conv_tail (B, cw-1, conv_ch))."""
+    B, S, D = x.shape
+    z, xbc, dt, inner, N, H = _ssd_split(p, x, cfg)
+    cw = cfg.conv_width
+    conv_tail = jnp.pad(xbc, ((0, 0), (max(0, cw - 1 - S), 0), (0, 0))
+                        )[:, -(cw - 1):]
+    xbc = jax.nn.silu(conv1d(p["conv"], xbc))
+    P_ = cfg.ssm_head_dim
+    xs = xbc[..., :inner].reshape(B, S, H, P_)
+    Bm = xbc[..., inner:inner + N]
+    Cm = xbc[..., inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_param"])           # (H,) negative
+    adt = A * dt                          # (B, S, H) log-decay per step
+    dtx = (xs.astype(jnp.float32) * dt[..., None])
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    pad = (-S) % Q
+    if pad:
+        # padded steps carry dt=0: a=1 (no decay), dtx=0 (no input) — the
+        # final state is exactly the state after step S_orig.
+        adt = jnp.pad(adt, ((0, 0), (0, pad), (0, 0)))
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // Q
+    # reshape into chunks
+    adt_c = adt.reshape(B, nC, Q, H)
+    cum = jnp.cumsum(adt_c, axis=2)       # s_t within chunk
+    dtx_c = dtx.reshape(B, nC, Q, H, P_)
+    B_c = Bm.reshape(B, nC, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nC, Q, N).astype(jnp.float32)
+    # intra-chunk (quadratic within Q): M_ij = C_i.B_j e^{s_i - s_j} [j<=i]
+    li = cum[..., :, None, :] - cum[..., None, :, :]       # (B,nC,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, ..., None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, dtx_c)
+    # chunk-final states: S_c = sum_j e^{s_Q - s_j} dtx_j B_j^T
+    tail = jnp.exp(cum[..., -1:, :] - cum)                  # (B,nC,Q,H)
+    S_c = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", tail, dtx_c, B_c)
+    # inter-chunk scan: H_c = e^{sum chunk} H_{c-1} + S_{c-1}
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nC,H)
+
+    def scan_fn(h, inp):
+        dec, s = inp
+        h_new = h * dec[..., None, None] + s
+        return h_new, h
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    s_t = jnp.moveaxis(S_c, 1, 0)
+    h0 = jnp.zeros((B, H, P_, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0, (dec_t, s_t))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nC,H,P,N)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         C_c, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P_)[:, :S_orig]
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S_orig, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = y * p["norm"]["scale"].astype(x.dtype)  # gated RMS-ish scale
+    return dense(p["out_proj"], y), h_final, conv_tail
+
+
+def ssd_decode(p, x, state, conv_cache, cfg):
+    """x: (B, 1, D). state: (B, H, P, N); conv_cache: (B, cw-1, conv_ch)."""
+    B = x.shape[0]
+    z, xbc, dt, inner, N, H = _ssd_split(p, x, cfg)
+    xbc, conv_cache = conv1d_step(p["conv"], xbc, conv_cache)
+    xbc = jax.nn.silu(xbc)
+    P_ = cfg.ssm_head_dim
+    xs = xbc[..., :inner].reshape(B, H, P_)
+    Bm = xbc[:, 0, inner:inner + N].astype(jnp.float32)
+    Cm = xbc[:, 0, inner + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_param"]) * dt)  # (B,H)
+    dtx = xs.astype(jnp.float32) * dt[..., None]
+    state = state * a[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", dtx, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z) * p["norm"]["scale"].astype(x.dtype)
+    return dense(p["out_proj"], y), state, conv_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    D = cfg.d_model
+    w = cfg.rnn_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "gate_proj": dense_init(ks[0], D, w, dtype),   # gelu branch
+        "in_proj": dense_init(ks[1], D, w, dtype),     # recurrent branch
+        "conv": conv1d_init(ks[2], cfg.conv_width, w, dtype),
+        "a_gate": dense_init(ks[3], w, w, dtype, bias=True),
+        "x_gate": dense_init(ks[4], w, w, dtype, bias=True),
+        "a_param": jnp.full((w,), 0.5, jnp.float32),   # Λ
+        "out_proj": dense_init(ks[5], w, D, dtype),
+    }
+
+
+def _rglru_gates(p, xr):
+    r = jax.nn.sigmoid(dense(p["a_gate"], xr).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["x_gate"], xr).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i * xr.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(p, x, cfg):
+    """x: (B, S, D) -> (y, final_state (B,w), conv_tail).
+    Parallel over the sequence via associative scan."""
+    gate = jax.nn.gelu(dense(p["gate_proj"], x))
+    xr_raw = dense(p["in_proj"], x)
+    cw = cfg.conv_width
+    conv_tail = jnp.pad(xr_raw, ((0, 0), (max(0, cw - 1 - x.shape[1]), 0),
+                                 (0, 0)))[:, -(cw - 1):]
+    xr = conv1d(p["conv"], xr_raw)
+    a, b = _rglru_gates(p, xr)  # h_t = a_t h_{t-1} + b_t
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype) * gate
+    return dense(p["out_proj"], y), h[:, -1], conv_tail
+
+
+def rglru_decode(p, x, state, conv_cache, cfg):
+    """x: (B, 1, D); state: (B, w)."""
+    gate = jax.nn.gelu(dense(p["gate_proj"], x))
+    xr, conv_cache = conv1d_step(p["conv"], dense(p["in_proj"], x),
+                                 conv_cache)
+    a, b = _rglru_gates(p, xr)
+    state = a[:, 0] * state + b[:, 0]
+    y = state[:, None].astype(x.dtype) * gate
+    return dense(p["out_proj"], y), state, conv_cache

@@ -1,0 +1,334 @@
+"""Composable transformer stacks for all assigned architectures.
+
+A model is a sequence of *groups*; each group is a repeated *pattern* of
+sublayer kinds (attn / local_attn / cross_attn / rglru / ssd). Group
+repeats are stacked and executed with lax.scan (fast compiles at 512
+devices, optional per-unit remat). Decode threads a cache pytree shaped
+like the params (stacked along the repeat dim).
+
+Cache entries per kind:
+  attn        k, v: (B, Smax, KVH, hd)           [seq dim model-sharded]
+  mla         c: (B, Smax, r), kr: (B, Smax, rope)
+  local_attn  ring k, v: (B, window, KVH, hd), pos: (B? -> (window,)) slots
+  cross_attn  as attn + static enc_k, enc_v: (B, Senc, KVH, hd)
+  rglru       h: (B, w), conv: (B, cw-1, w)
+  ssd         h: (B, H, P, N), conv: (B, cw-1, conv_ch)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (cross_entropy, dense, dense_init,
+                                 embed_init, embed_lookup, logits_head,
+                                 mlp, mlp_init, rmsnorm, rmsnorm_init)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sublayer init / apply
+# ---------------------------------------------------------------------------
+
+def sublayer_init(key, kind, cfg, *, use_moe=True, self_causal=True):
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"norm1": rmsnorm_init(D, dt)}
+    if kind in ("attn", "local_attn", "cross_attn"):
+        p["mixer"] = (attn.mla_init(ks[0], cfg, dt) if cfg.mla
+                      else attn.gqa_init(ks[0], cfg, dt))
+        if kind == "cross_attn":
+            p["normx"] = rmsnorm_init(D, dt)
+            p["xattn"] = attn.gqa_init(ks[2], cfg, dt)
+        p["norm2"] = rmsnorm_init(D, dt)
+        p["ffn"] = (moe_mod.moe_init(ks[1], cfg, dt)
+                    if (cfg.moe and use_moe) else mlp_init(ks[1], D, cfg.d_ff, dt))
+    elif kind == "rglru":
+        p["mixer"] = ssm.rglru_init(ks[0], cfg, dt)
+        p["norm2"] = rmsnorm_init(D, dt)
+        p["ffn"] = (moe_mod.moe_init(ks[1], cfg, dt)
+                    if (cfg.moe and use_moe) else mlp_init(ks[1], D, cfg.d_ff, dt))
+    elif kind == "ssd":
+        p["mixer"] = ssm.ssd_init(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _ffn_apply(p, x, cfg, use_moe):
+    if cfg.moe and use_moe:
+        return moe_mod.moe_block(p, x, cfg)
+    return mlp(p, x, layout=cfg.layer_layout), jnp.float32(0)
+
+
+def _seq_shard(x):
+    """Sequence parallelism on the residual stream: (B, S, D) sharded
+    (batch, model, -). The per-layer remat/scan-saved residual shrinks by
+    the model-axis size; GSPMD inserts the all-gather/reduce-scatter pair
+    around each mixer (Megatron-SP)."""
+    return shd.constrain(x, shd.batch_axes() or None, "model", None)
+
+
+def sublayer_apply(p, kind, x, pos, cfg, *, enc=None, use_moe=True,
+                   causal=True, cache=None):
+    """Full-sequence forward. Returns (x, aux, cache) — ``cache`` is the
+    populated prefill cache when a (zeroed) cache pytree is passed, else
+    None. Attention K/V written to the cache are recomputed projections of
+    the same operands and get CSE'd with the forward's own."""
+    aux = jnp.float32(0)
+    x = _seq_shard(x)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local_attn", "cross_attn"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        if cfg.mla:
+            y = attn.mla_forward(p["mixer"], h, pos, cfg)
+        else:
+            y = attn.gqa_forward(p["mixer"], h, pos, cfg, causal=causal,
+                                 window=window)
+        if cache is not None:
+            cache = sublayer_prefill_cache(p, kind, h, pos, cfg, cache,
+                                           enc=enc)
+        x = x + y
+        if kind == "cross_attn":
+            hx = rmsnorm(p["normx"], x, cfg.norm_eps)
+            x = x + attn.gqa_forward(p["xattn"], hx, pos, cfg,
+                                     kv_override=enc)
+        h2 = rmsnorm(p["norm2"], _seq_shard(x), cfg.norm_eps)
+        y2, aux = _ffn_apply(p["ffn"], h2, cfg, use_moe)
+        x = _seq_shard(x + y2)
+    elif kind == "rglru":
+        y, hstate, conv_tail = ssm.rglru_forward(p["mixer"], h, cfg)
+        if cache is not None:
+            cache = dict(cache, h=hstate,
+                         conv=conv_tail.astype(cache["conv"].dtype))
+        x = x + y
+        h2 = rmsnorm(p["norm2"], _seq_shard(x), cfg.norm_eps)
+        y2, aux = _ffn_apply(p["ffn"], h2, cfg, use_moe)
+        x = _seq_shard(x + y2)
+    elif kind == "ssd":
+        y, hstate, conv_tail = ssm.ssd_forward(p["mixer"], h, cfg)
+        if cache is not None:
+            cache = dict(cache, h=hstate,
+                         conv=conv_tail.astype(cache["conv"].dtype))
+        x = _seq_shard(x + y)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def sublayer_cache(kind, cfg, batch, smax, enc_len=0):
+    """ShapeDtypeStruct pytree for one sublayer's cache."""
+    dt = _cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    KVH = cfg.num_kv_heads
+    D = cfg.d_model
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if kind == "attn" or kind == "cross_attn":
+        if cfg.mla:
+            c = {"c": sd((batch, smax, cfg.kv_lora_rank), dt),
+                 "kr": sd((batch, smax, cfg.qk_rope_dim), dt)}
+        else:
+            c = {"k": sd((batch, smax, KVH, hd), dt),
+                 "v": sd((batch, smax, KVH, hd), dt)}
+        if kind == "cross_attn":
+            c["enc_k"] = sd((batch, enc_len, KVH, hd), dt)
+            c["enc_v"] = sd((batch, enc_len, KVH, hd), dt)
+        return c
+    if kind == "local_attn":
+        w = cfg.local_window
+        return {"k": sd((batch, w, KVH, hd), dt),
+                "v": sd((batch, w, KVH, hd), dt),
+                "slot_pos": sd((batch, w), jnp.int32)}
+    if kind == "rglru":
+        w = cfg.rnn_width or D
+        return {"h": sd((batch, w), f32),
+                "conv": sd((batch, cfg.conv_width - 1, w), dt)}
+    if kind == "ssd":
+        inner = cfg.ssm_expand * D
+        H = inner // cfg.ssm_head_dim
+        return {"h": sd((batch, H, cfg.ssm_head_dim, cfg.ssm_state), f32),
+                "conv": sd((batch, cfg.conv_width - 1,
+                            inner + 2 * cfg.ssm_state), dt)}
+    raise ValueError(kind)
+
+
+def zeros_like_sds(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# decode-step sublayer
+# ---------------------------------------------------------------------------
+
+def sublayer_decode(p, kind, x, cache, cache_len, cfg, *, use_moe=True):
+    aux = jnp.float32(0)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "cross_attn"):
+        if cfg.mla:
+            y, c, kr = attn.mla_decode(p["mixer"], h, cache["c"],
+                                       cache["kr"], cache_len, cfg)
+            cache = dict(cache, c=c, kr=kr)
+        else:
+            y, ck, cv = attn.gqa_decode(p["mixer"], h, cache["k"],
+                                        cache["v"], cache_len, cfg)
+            cache = dict(cache, k=ck, v=cv)
+        x = x + y
+        if kind == "cross_attn":
+            hx = rmsnorm(p["normx"], x, cfg.norm_eps)
+            yx = _cross_decode(p["xattn"], hx, cache["enc_k"],
+                               cache["enc_v"], cfg)
+            x = x + yx
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y2, aux = _ffn_apply(p["ffn"], h2, cfg, use_moe)
+        x = x + y2
+    elif kind == "local_attn":
+        y, cache = _local_ring_decode(p["mixer"], h, cache, cache_len, cfg)
+        x = x + y
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y2, aux = _ffn_apply(p["ffn"], h2, cfg, use_moe)
+        x = x + y2
+    elif kind == "rglru":
+        y, hs, conv = ssm.rglru_decode(p["mixer"], h, cache["h"],
+                                       cache["conv"], cfg)
+        cache = dict(cache, h=hs, conv=conv)
+        x = x + y
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y2, aux = _ffn_apply(p["ffn"], h2, cfg, use_moe)
+        x = x + y2
+    elif kind == "ssd":
+        y, hs, conv = ssm.ssd_decode(p["mixer"], h, cache["h"],
+                                     cache["conv"], cfg)
+        cache = dict(cache, h=hs, conv=conv)
+        x = x + y
+    return x, cache, aux
+
+
+def _cross_decode(p, x, enc_k, enc_v, cfg):
+    """Single-token cross-attention against static encoder KV."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = dense(p["wq"], x)  # (B,1,H,hd), no rope on cross
+    KVH = enc_k.shape[2]
+    G = cfg.num_heads // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   enc_k.astype(jnp.float32)) * hd ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, enc_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads, hd).astype(x.dtype)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"]["w"].astype(x.dtype))
+
+
+def _local_ring_decode(p, x, cache, cache_len, cfg):
+    """Sliding-window decode with a ring buffer of width ``local_window``."""
+    from repro.models.layers import rope as rope_fn
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    W = cfg.local_window
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q = rope_fn(dense(p["wq"], x), pos, cfg.rope_theta)
+    k_new = rope_fn(dense(p["wk"], x), pos, cfg.rope_theta)
+    v_new = dense(p["wv"], x)
+    slot = cache_len % W
+    onehot = (jnp.arange(W) == slot).astype(cache["k"].dtype)
+    ck = cache["k"] * (1 - onehot)[None, :, None, None] + \
+        k_new.astype(cache["k"].dtype) * onehot[None, :, None, None]
+    cv = cache["v"] * (1 - onehot)[None, :, None, None] + \
+        v_new.astype(cache["v"].dtype) * onehot[None, :, None, None]
+    spos = cache["slot_pos"] * (1 - onehot[None].astype(jnp.int32)) + \
+        cache_len * onehot[None].astype(jnp.int32)
+    valid = (spos <= cache_len) & (spos > cache_len - W)
+    KVH = ck.shape[2]
+    G = cfg.num_heads // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None], s, attn.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bshd,hdo->bso", out, p["wo"]["w"].astype(x.dtype))
+    return y, dict(cache, k=ck, v=cv, slot_pos=spos)
+
+
+# ---------------------------------------------------------------------------
+# prefill-time cache population
+# ---------------------------------------------------------------------------
+
+def sublayer_prefill_cache(p, kind, x_normed, pos, cfg, cache, enc=None):
+    """Populate a zeroed cache from the full prompt (run alongside the
+    full-sequence forward; x_normed is norm1(x) for this sublayer)."""
+    from repro.models.layers import rope as rope_fn
+    B, S = x_normed.shape[:2]
+    if kind in ("attn", "cross_attn"):
+        if cfg.mla:
+            dkv = dense(p["mixer"]["w_dkv"], x_normed)
+            c_kv = rmsnorm(p["mixer"]["kv_norm"],
+                           dkv[..., :cfg.kv_lora_rank], cfg.norm_eps)
+            kr = rope_fn(dkv[..., None, cfg.kv_lora_rank:], pos,
+                         cfg.rope_theta)[..., 0, :]
+            c_kv, kr = _maybe_cache_shard(cfg, c_kv, kr)
+            cache = dict(cache,
+                         c=_write_prefix(cache["c"], c_kv),
+                         kr=_write_prefix(cache["kr"], kr))
+        else:
+            k = dense(p["mixer"]["wk"], x_normed)
+            if cfg.pos_emb == "rope":
+                k = rope_fn(k, pos, cfg.rope_theta)
+            v = dense(p["mixer"]["wv"], x_normed)
+            k, v = _maybe_cache_shard(cfg, k, v)
+            cache = dict(cache, k=_write_prefix(cache["k"], k),
+                         v=_write_prefix(cache["v"], v))
+        if kind == "cross_attn" and enc is not None:
+            cache = dict(cache,
+                         enc_k=dense(p["xattn"]["wk"], enc).astype(cache["enc_k"].dtype),
+                         enc_v=dense(p["xattn"]["wv"], enc).astype(cache["enc_v"].dtype))
+    elif kind == "local_attn":
+        W = cfg.local_window
+        k = rope_fn(dense(p["mixer"]["wk"], x_normed), pos, cfg.rope_theta)
+        v = dense(p["mixer"]["wv"], x_normed)
+        take = min(W, S)
+        sl = slice(S - take, S)
+        slots = (pos[0, sl] % W)
+        ck = jnp.zeros_like(cache["k"]).at[:, slots].set(
+            k[:, sl].astype(cache["k"].dtype))
+        cv = jnp.zeros_like(cache["v"]).at[:, slots].set(
+            v[:, sl].astype(cache["v"].dtype))
+        sp = jnp.full_like(cache["slot_pos"], -10**9).at[:, slots].set(
+            jnp.broadcast_to(pos[0, sl], (B, take)))
+        cache = dict(cache, k=ck, v=cv, slot_pos=sp)
+    return cache
+
+
+def _write_prefix(buf, val):
+    return buf.at[:, :val.shape[1]].set(val.astype(buf.dtype))
+
+
+def _maybe_cache_shard(cfg, *tensors):
+    """Hillclimb (prefill_cache_seqshard): pin freshly computed K/V (or
+    c_kv/k_rope) to the cache's (batch, seq->model) layout before the
+    dynamic-update write, so GSPMD doesn't fall back to the involuntary
+    full-rematerialization reshard inside the layer scan."""
+    if not cfg.prefill_cache_seqshard:
+        return tensors
+    ba = shd.batch_axes() or None
+    out = tuple(
+        shd.constrain(t, ba, "model", *([None] * (t.ndim - 2)))
+        for t in tensors)
+    return out

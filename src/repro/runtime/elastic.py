@@ -1,0 +1,40 @@
+"""Elastic scaling: rebuild the mesh at a new size and reshard state.
+
+The mechanism is deliberately thin because the substrate makes it cheap:
+  * checkpoints are mesh-agnostic (host numpy),
+  * shardings are derived from (config, mesh) — not stored,
+  * the data pipeline is deterministic in (seed, step, shard),
+so scaling from N to M pods is: build new mesh -> derive shardings ->
+restore latest checkpoint with them -> continue at the saved step.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.distributed import sharding as shd
+
+
+def reshard_restore(ckpt_dir: str, target_tree, mesh, *, fsdp: bool,
+                    step=None):
+    """Restore a params/opt pytree onto ``mesh`` (any size)."""
+    with shd.use_mesh(mesh):
+        shardings = shd.param_shardings(
+            jax.eval_shape(lambda: target_tree), fsdp)
+        return ckpt.restore(ckpt_dir, target_tree, step=step,
+                            shardings=shardings)
+
+
+def remesh(n_devices: int, *, multi_pod: bool = False):
+    """Build the largest (data, model) mesh for the available devices,
+    holding the model axis fixed and scaling the data axis — the policy a
+    resize controller would use when pods join/leave."""
+    from repro.launch.mesh import make_production_mesh  # lazy
+    try:
+        return make_production_mesh(multi_pod=multi_pod)
+    except Exception:
+        devs = jax.devices()[:n_devices]
+        model = min(16, len(devs))
+        data = len(devs) // model
+        return jax.make_mesh((data, model), ("data", "model"),
+                             devices=devs[: data * model])

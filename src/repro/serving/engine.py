@@ -1,0 +1,73 @@
+"""Batched serving engine: continuous prefill+decode over a request queue.
+
+Slots hold independent sequences in a shared KV cache (batch dim). The
+engine jit-compiles one prefill and one decode step per (batch, seq-cap)
+bucket and runs greedy or top-k sampling. Designed so the same code path
+drives the decode_32k / long_500k dry-run shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serving import sampler
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_batch=8, max_seq=256,
+                 greedy=True, seed=0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, t, c, e: M.prefill(p, cfg, t, c, enc_inp=e),
+            static_argnums=())
+        self._decode = jax.jit(
+            lambda p, t, c, n: M.decode_step(p, cfg, t, c, n))
+
+    def generate(self, requests: List[Request], enc_inp=None) -> List[Request]:
+        """Static batching: pad all prompts to one length, decode together."""
+        B = len(requests)
+        assert B <= self.max_batch
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        cache = M.init_cache(self.cfg, B, self.max_seq,
+                             enc_len=self.cfg.num_frontend_tokens)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache,
+                                      enc_inp)
+        outs = [[] for _ in range(B)]
+        max_new = max(r.max_new_tokens for r in requests)
+        pos = plen
+        for t in range(max_new):
+            if self.greedy:
+                nxt = sampler.greedy(logits)
+            else:
+                self.key, sk = jax.random.split(self.key)
+                nxt = sampler.topk_sample(sk, logits)
+            nxt_np = np.asarray(nxt)
+            for i in range(B):
+                if t < requests[i].max_new_tokens:
+                    outs[i].append(int(nxt_np[i]))
+            logits, cache = self._decode(self.params, nxt[:, None], cache,
+                                         jnp.int32(pos))
+            pos += 1
+        for i, r in enumerate(requests):
+            r.out = np.asarray(outs[i], np.int32)
+        return requests

@@ -1,0 +1,106 @@
+"""Samplers, including the zipper top-k merge.
+
+With the vocab sharded over the model axis, global top-k = merging 16
+per-shard sorted candidate streams — exactly the paper's mszip use case
+(merging sorted key-value partitions). ``zipper_topk`` demonstrates the
+primitive on real logit streams; the jitted serving path uses the
+numerically identical two-level lax.top_k (XLA lowers it to the same
+partial-sort + merge schedule under GSPMD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import EMPTY
+from repro.kernels import ops as kops
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def topk_sample(key, logits, k=40, temperature=1.0):
+    v, idx = jax.lax.top_k(logits, k)
+    v = v / jnp.maximum(temperature, 1e-6)
+    choice = jax.random.categorical(key, v)
+    return jnp.take_along_axis(idx, choice[..., None], -1)[..., 0].astype(jnp.int32)
+
+
+def zipper_topk(logits_shards, k):
+    """Global top-k over per-shard logits via the stream-merge primitive.
+
+    logits_shards: list of (V_loc,) numpy arrays (one per model shard).
+    Returns (values, global_ids) of the global top-k, descending.
+
+    Keys must ascend for the zipper, so we merge (-rank) streams keyed by
+    negated quantized logits; values carry the global vocab index."""
+    R = 1
+    while R < k:
+        R *= 2
+    # one global quantization so keys are comparable across shards; the
+    # shard id in the low bits keeps keys unique (the zipper accumulates
+    # values of duplicate keys, which would corrupt the carried gids)
+    gmax = max(float(lg.max()) for lg in logits_shards)
+    n_sh = len(logits_shards)
+    streams = []
+    for s, lg in enumerate(logits_shards):
+        loc = np.argsort(lg)[::-1][:k]              # local top-k, desc
+        q = np.round((gmax - lg[loc].astype(np.float64)) * 1e6)
+        q = (np.clip(q, 0, 2**26).astype(np.int64) * n_sh + s).astype(np.int32)
+        streams.append((q, loc + s * len(lg), lg[loc]))
+    # iterative pairwise zipper merge of sorted streams
+    parts = []
+    for q, gid, val in streams:
+        order = np.argsort(q, kind="stable")
+        parts.append((q[order], gid[order].astype(np.float32)))
+    while len(parts) > 1:
+        nxt = []
+        for i in range(0, len(parts) - 1, 2):
+            (ka, va), (kb, vb) = parts[i], parts[i + 1]
+            nxt.append(_merge_two(ka, va, kb, vb, R))
+            if i + 3 == len(parts):
+                nxt.append(parts[i + 2])
+        parts = nxt
+    keys, gids = parts[0]
+    take = gids[:k].astype(np.int64)
+    all_logits = np.concatenate(logits_shards)
+    return all_logits[take], take
+
+
+def _merge_two(ka, va, kb, vb, R):
+    """Chunked mszip merge of two sorted (key, gid) streams (host driver
+    around the kernel — keys are unique so no accumulation occurs)."""
+    out_k, out_v = [], []
+    pa = pb = 0
+    while pa < len(ka) and pb < len(kb):
+        ca, cav = _chunk(ka, va, pa, R)
+        cb, cbv = _chunk(kb, vb, pb, R)
+        la = np.int32(min(R, len(ka) - pa))
+        lb = np.int32(min(R, len(kb) - pb))
+        klo, vlo, khi, vhi, na, nb, ol = kops.stream_merge(
+            jnp.asarray(ca[None]), jnp.asarray(cav[None]),
+            jnp.asarray(la[None]), jnp.asarray(cb[None]),
+            jnp.asarray(cbv[None]), jnp.asarray(lb[None]), impl="xla")
+        n = int(ol[0])
+        merged_k = np.concatenate([np.asarray(klo[0]), np.asarray(khi[0])])[:n]
+        merged_v = np.concatenate([np.asarray(vlo[0]), np.asarray(vhi[0])])[:n]
+        out_k.append(merged_k)
+        out_v.append(merged_v)
+        pa += int(na[0])
+        pb += int(nb[0])
+    out_k.append(ka[pa:])
+    out_v.append(va[pa:])
+    out_k.append(kb[pb:])
+    out_v.append(vb[pb:])
+    return np.concatenate(out_k), np.concatenate(out_v)
+
+
+def _chunk(k, v, p, R):
+    ck = np.full(R, EMPTY, np.int32)
+    cv = np.zeros(R, np.float32)
+    n = min(R, len(k) - p)
+    ck[:n] = k[p:p + n]
+    cv[:n] = v[p:p + n]
+    return ck, cv

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; only the dry-run uses 512
+# placeholder devices (and sets its own XLA_FLAGS before jax init).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

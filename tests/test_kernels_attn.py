@@ -1,0 +1,56 @@
+"""Sweeps for the flash-attention and grouped-matmul Pallas kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.ref import grouped_matmul_ref, mha_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,hd,causal,window", [
+    (2, 64, 64, 4, 2, 16, True, 0),
+    (1, 96, 96, 8, 1, 32, True, 32),
+    (2, 48, 64, 4, 4, 16, True, 0),     # q shorter than kv (chunked prefill)
+    (1, 64, 64, 2, 2, 8, False, 0),     # bidirectional (encoder)
+    (1, 128, 128, 4, 1, 64, True, 0),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, H, KVH, hd, causal, window,
+                               dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, KVH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, KVH, hd), jnp.float32)
+    ref = mha_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_pallas(q.astype(dtype), k.astype(dtype),
+                                 v.astype(dtype), causal=causal,
+                                 window=window, bq=32, bk=16)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("E,D,F,sizes", [
+    (4, 16, 32, [8, 16, 0, 24]),
+    (3, 8, 8, [8, 8, 8]),
+    (5, 32, 16, [0, 0, 40, 8, 0]),
+    (2, 64, 128, [32, 0]),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(E, D, F, sizes, dtype):
+    rng = np.random.default_rng(1)
+    T = 64
+    x = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32))
+    gs = jnp.asarray(np.array(sizes, np.int32))
+    ref = grouped_matmul_ref(x, w, gs)
+    out = grouped_matmul_pallas(x.astype(dtype), w.astype(dtype), gs, bt=8)
+    tol = 0.1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

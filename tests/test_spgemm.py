@@ -1,0 +1,142 @@
+"""SpGEMM engine: all five implementations agree; hypothesis properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spgemm as sg
+from repro.core.formats import (CSR, EMPTY, csr_from_coo, csr_from_dense,
+                                csr_to_numpy, random_sparse)
+from repro.kernels import ref
+
+
+def _dense(m):
+    return np.asarray(m.to_dense(), np.float64)
+
+
+@pytest.mark.parametrize("pattern", ["uniform", "powerlaw", "banded"])
+@pytest.mark.parametrize("method", ["scl-hash", "esc", "spz", "spz-rsort"])
+def test_methods_match_oracle(pattern, method):
+    A = random_sparse(96, 96, 0.03, seed=11, pattern=pattern)
+    want = _dense(sg.spgemm_scl_array(A, A))
+    got = _dense(sg.spgemm(A, A, method))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("R", [8, 16, 128])
+def test_spz_chunk_widths(R):
+    A = random_sparse(64, 64, 0.05, seed=5, pattern="powerlaw")
+    want = _dense(sg.spgemm_scl_array(A, A))
+    out, stats = sg.spgemm_spz(A, A, R=R, impl="xla")
+    np.testing.assert_allclose(_dense(out), want, rtol=1e-4, atol=1e-4)
+    assert stats.n_mssort > 0
+
+
+def test_spz_rectangular():
+    rng = np.random.default_rng(0)
+    A = random_sparse(40, 70, 0.06, seed=1)
+    B = random_sparse(70, 50, 0.06, seed=2)
+    want = _dense(sg.spgemm_scl_array(A, B))
+    out, _ = sg.spgemm_spz(A, B, R=16, impl="xla")
+    np.testing.assert_allclose(_dense(out), want, rtol=1e-4, atol=1e-4)
+    got_esc = _dense(sg.spgemm_esc(A, B))
+    np.testing.assert_allclose(got_esc, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rsort_reduces_or_equals_instructions_on_skewed():
+    A = random_sparse(128, 128, 0.04, seed=9, pattern="powerlaw")
+    _, s0 = sg.spgemm_spz(A, A, R=16, S=16, impl="xla")
+    _, s1 = sg.spgemm_spz(A, A, R=16, S=16, rsort=True, impl="xla")
+    assert s1.n_mssort + s1.n_mszip <= s0.n_mssort + s0.n_mszip
+
+
+def test_work_stats_match_bruteforce():
+    A = random_sparse(50, 50, 0.05, seed=3)
+    d = _dense(A)
+    w = sg.row_work(A, A)
+    nnz_per_row = (d != 0).sum(1)
+    expect = [(d[i] != 0) @ nnz_per_row for i in range(50)]
+    np.testing.assert_array_equal(w, expect)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@st.composite
+def sparse_pair(draw):
+    n = draw(st.integers(8, 40))
+    density = draw(st.floats(0.01, 0.15))
+    seed = draw(st.integers(0, 10_000))
+    pattern = draw(st.sampled_from(["uniform", "powerlaw", "banded"]))
+    return random_sparse(n, n, density, seed=seed, pattern=pattern)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_pair())
+def test_prop_esc_equals_oracle(A):
+    want = _dense(sg.spgemm_scl_array(A, A))
+    got = _dense(sg.spgemm_esc(A, A))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sparse_pair())
+def test_prop_spz_equals_oracle(A):
+    want = _dense(sg.spgemm_scl_array(A, A))
+    got = _dense(sg.spgemm_spz(A, A, R=16, impl="xla")[0])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10_000))
+def test_prop_stream_sort_invariants(S, seed):
+    """Sorted-unique output, conserved mass, correct lengths."""
+    rng = np.random.default_rng(seed)
+    R = 32
+    lens = rng.integers(0, R + 1, S).astype(np.int32)
+    keys = rng.integers(0, 12, (S, R)).astype(np.int32)
+    vals = rng.standard_normal((S, R)).astype(np.float32)
+    k, v, l = ref.stream_sort_ref(jnp.asarray(keys), jnp.asarray(vals),
+                                  jnp.asarray(lens))
+    k, v, l = np.asarray(k), np.asarray(v), np.asarray(l)
+    for s in range(S):
+        kk = k[s, :l[s]]
+        assert (np.diff(kk) > 0).all()                      # strict ascending
+        assert (k[s, l[s]:] == EMPTY).all()                 # packed
+        np.testing.assert_allclose(v[s, :l[s]].sum(),
+                                   vals[s, :lens[s]].sum(), rtol=1e-4,
+                                   atol=1e-4)               # mass conserved
+        assert set(kk) == set(keys[s, :lens[s]])            # key set preserved
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_prop_merge_then_remerge_idempotent(seed):
+    """Merging a sorted stream with an empty one emits nothing and consumes
+    nothing; merging with itself accumulates values exactly 2x."""
+    rng = np.random.default_rng(seed)
+    R = 16
+    n = rng.integers(1, R + 1)
+    keys = np.full((1, R), EMPTY, np.int32)
+    vals = np.zeros((1, R), np.float32)
+    keys[0, :n] = np.sort(rng.choice(100, n, replace=False))
+    vals[0, :n] = rng.standard_normal(n)
+    lens = np.array([n], np.int32)
+    a = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lens))
+    klo, vlo, khi, vhi, ca, cb, ol = ref.stream_merge_ref(*a, *a)
+    assert int(ol[0]) == n and int(ca[0]) == n and int(cb[0]) == n
+    merged_v = np.concatenate([np.asarray(vlo)[0], np.asarray(vhi)[0]])[:n]
+    np.testing.assert_allclose(merged_v, 2 * vals[0, :n], rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_formats_roundtrip():
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((13, 17)) * (rng.random((13, 17)) < 0.2)
+    m = csr_from_dense(d.astype(np.float32))
+    np.testing.assert_allclose(_dense(m), d, rtol=1e-6, atol=1e-6)
+    indptr, idx, val = csr_to_numpy(m)
+    m2 = csr_from_coo(np.repeat(np.arange(13), np.diff(indptr)), idx, val,
+                      (13, 17))
+    np.testing.assert_allclose(_dense(m2), d, rtol=1e-6, atol=1e-6)

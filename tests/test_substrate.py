@@ -1,0 +1,185 @@
+"""Substrate: optimizer, data pipeline, checkpointing, fault tolerance."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import PrefetchLoader, TokenDataset
+from repro.optim import adamw
+from repro.runtime.fault import FaultConfig, Preempted, run_resilient
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            decay_steps=200)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw.init_state(cfg, params)
+    grad_fn = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))
+    for _ in range(150):
+        params, opt, _ = adamw.apply_updates(cfg, params, opt, grad_fn(params))
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
+
+
+def test_adamw_bf16_state_roundtrip():
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw.init_state(cfg, params)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4, 4), 0.1)}
+    p2, opt2, m = adamw.apply_updates(cfg, params, opt, g)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_no_weight_decay_on_norms():
+    cfg = adamw.AdamWConfig(lr=1.0, weight_decay=1.0, warmup_steps=1)
+    params = {"norm": {"scale": jnp.ones(3)}, "w1": {"w": jnp.ones(3)}}
+    opt = adamw.init_state(cfg, params)
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    p2, _, _ = adamw.apply_updates(cfg, params, opt, zero_g)
+    np.testing.assert_allclose(np.asarray(p2["norm"]["scale"]), 1.0)
+    assert float(p2["w1"]["w"][0]) < 1.0  # decayed
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_dataset_deterministic_and_sharded():
+    ds0 = TokenDataset(1000, 16, 8, seed=7, n_shards=2, shard_id=0)
+    ds1 = TokenDataset(1000, 16, 8, seed=7, n_shards=2, shard_id=1)
+    a, b = ds0.batch_at(3), ds0.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(ds0.batch_at(3)["tokens"],
+                              ds1.batch_at(3)["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_prefetch_loader_order_and_resume():
+    ds = TokenDataset(100, 8, 4, seed=1)
+    loader = PrefetchLoader(ds).start(step=5)
+    b = next(loader)
+    assert b["_step"] == 5
+    np.testing.assert_array_equal(b["tokens"], ds.batch_at(5)["tokens"])
+    loader.stop()
+
+
+def test_straggler_backup_fetch():
+    ds = TokenDataset(100, 8, 4, seed=1)
+    calls = {"n": 0}
+
+    def slow_fetch(step):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(1.0)  # primary straggles past the deadline
+        return ds.batch_at(step)
+
+    loader = PrefetchLoader(ds, deadline_s=0.1, fetch_fn=slow_fetch).start()
+    b = next(loader)
+    loader.stop()
+    assert loader.backup_fetches >= 1
+    np.testing.assert_array_equal(b["tokens"], ds.batch_at(0)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip_and_keep(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [3, 4]
+    out = ckpt.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_ckpt_async_save(tmp_path):
+    tree = {"a": jnp.zeros(10)}
+    t = ckpt.save(str(tmp_path), 7, tree, blocking=False)
+    t.join()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_ckpt_torn_write_invisible(tmp_path):
+    # a .tmp directory must never be listed as a checkpoint
+    os.makedirs(tmp_path / ".tmp_step_9")
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def _toy_loop(tmp_path, fail_at=None, max_restarts=3):
+    state = {"x": jnp.zeros(())}
+    fired = {"done": False}
+
+    def train_step(state, batch):
+        return {"x": state["x"] + 1}, {"loss": 1.0 / (float(state["x"]) + 1)}
+
+    def save_fn(step, state):
+        return ckpt.save(str(tmp_path), step, state, blocking=True)
+
+    def restore_fn():
+        s = ckpt.latest_step(str(tmp_path))
+        if s is None:
+            return None
+        return s, ckpt.restore(str(tmp_path), {"x": jnp.zeros(())}, step=s)
+
+    def preempt(step):
+        if fail_at is not None and step == fail_at and not fired["done"]:
+            fired["done"] = True
+            raise Preempted(f"simulated preemption at {step}")
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                       max_restarts=max_restarts)
+    return run_resilient(train_step, state,
+                         lambda step: {"tokens": np.zeros(1)},
+                         fcfg, num_steps=10,
+                         save_fn=save_fn, restore_fn=restore_fn,
+                         preempt_hook=preempt)
+
+
+def test_resilient_loop_completes(tmp_path):
+    state, hist = _toy_loop(tmp_path)
+    assert float(state["x"]) == 10
+    assert hist["restarts"] == 0
+
+
+def test_resilient_loop_resumes_after_preemption(tmp_path):
+    state, hist = _toy_loop(tmp_path, fail_at=6)
+    # preempted at 6 -> resumed from step 4 checkpoint -> completed
+    assert hist["restarts"] == 1
+    assert float(state["x"]) == 10
+
+
+def test_resilient_loop_gives_up(tmp_path):
+    def always_preempt(step):
+        raise Preempted("always")
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path), max_restarts=2)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        run_resilient(lambda s, b: (s, {"loss": 0.0}), {"x": jnp.zeros(())},
+                      lambda step: {}, fcfg, num_steps=5,
+                      save_fn=lambda s, st: None,
+                      restore_fn=lambda: None,
+                      preempt_hook=always_preempt)
