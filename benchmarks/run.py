@@ -8,21 +8,29 @@
   table4  — area table + TPU overhead model    (paper Table IV analogue)
   moe     — zipper MoE dispatch microbenchmark (framework integration)
   kernels — stream sort/merge kernel timings   (per-kernel perf)
+  dispatch— engine-registry auto selection + batched execution path
 
-Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention, and
+writes one machine-readable ``BENCH_<section>.json`` per section run (the
+CI benchmark-smoke artifact).
 Run everything: PYTHONPATH=src python -m benchmarks.run
 Subset:         PYTHONPATH=src python -m benchmarks.run fig8 fig11 --fast
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks import datasets
 from repro.core import spgemm as sg
+
+# rows of the section currently running; flushed to BENCH_<section>.json
+_ROWS: list[dict] = []
 
 
 def _time_call(fn, repeat=1):
@@ -37,6 +45,16 @@ def _time_call(fn, repeat=1):
 
 def _emit(name, seconds, derived=""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                  "derived": derived})
+
+
+def _flush_json(section: str) -> None:
+    path = f"BENCH_{section}.json"
+    with open(path, "w") as f:
+        json.dump({"section": section, "rows": _ROWS}, f, indent=1)
+    _ROWS.clear()
+    print(f"# wrote {path}")
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +167,7 @@ def table4():
     merge_stages = (2 * R).bit_length() - 1
     _emit("table4.tpu_model", 0.0,
           f"R={R}|sort_stages={sort_stages}|merge_stages={merge_stages}|"
-          f"compress=1xMXU_128x128_matmul")
+          "compress=1xMXU_128x128_matmul")
 
 
 def moe_bench():
@@ -183,39 +201,98 @@ def kernels_bench():
     vals = jnp.asarray(rng.standard_normal((S, R)).astype(np.float32))
     lens = jnp.asarray(rng.integers(0, R, S).astype(np.int32))
     for impl in ("xla", "pallas"):
-        fn = lambda: ops.stream_sort(keys, vals, lens, impl=impl)[0].block_until_ready()
+        def fn():
+            return ops.stream_sort(keys, vals, lens,
+                                   impl=impl)[0].block_until_ready()
         fn()
         t, _ = _time_call(fn, repeat=3)
         _emit(f"kernels.stream_sort.{impl}", t,
               f"streams={S}|R={R}|Melem_per_s={S * R / t / 1e6:.1f}")
 
 
+def dispatch_bench(mats, fast=False):
+    """Engine-registry section: per-matrix auto selection (heuristic rule +
+    chosen engine + the features that drove it), auto-dispatch wall time,
+    and the batched single-compilation path vs lane-at-a-time execution."""
+    from repro.core import dispatch as dp
+    from repro.core.formats import batch_csr, random_sparse
+    print("# dispatch: auto-selection + batched single-compilation path")
+    # fresh private cache: measure selection, not a previous run's plans
+    cache = dp.AutotuneCache(os.path.join(
+        tempfile.mkdtemp(prefix="bench_autotune_"), "cache.json"))
+    for name, A in mats:
+        t_sel, info = _time_call(lambda: dp.explain(A, A), repeat=2)
+        f = info["features"]
+        if fast:
+            # selection overhead only: the spz engines' python drivers take
+            # seconds per matrix, too slow for the CI smoke lane
+            t = t_sel
+        else:
+            t, _ = _time_call(lambda: dp.spgemm(A, A, engine="auto",
+                                                cache=cache), repeat=2)
+        _emit(f"dispatch.auto.{name}", t,
+              f"engine={info['engine']}|rule={info['rule']}|"
+              f"select_us={t_sel * 1e6:.1f}|"
+              f"dens={f['density']:.2e}|var={f['work_var_per_group']:.2f}")
+    if fast:  # one end-to-end auto multiply to exercise the cached-plan path
+        A = mats[0][1]
+        dp.spgemm(A, A, engine="esc")  # warm
+        t, _ = _time_call(lambda: dp.spgemm(A, A, engine="esc"))
+        _emit("dispatch.exec.esc", t, f"matrix={mats[0][0]}")
+    # batched path: ragged request batch, one compilation across lanes
+    lanes = [random_sparse(256, 256, d, seed=i)
+             for i, d in enumerate((0.005, 0.01, 0.02, 0.04))]
+    A = batch_csr(lanes, batch_cap=len(lanes))
+    works = [int(sg.row_work(m, m).sum()) for m in lanes]
+    cap = 1 << max(16, (max(works) - 1).bit_length())
+    dp.spgemm_batched(A, A, engine="esc", cap_products=cap)  # warm the jit
+    t_b, _ = _time_call(
+        lambda: dp.spgemm_batched(A, A, engine="esc", cap_products=cap),
+        repeat=2 if fast else 3)
+    for m in lanes:
+        sg.spgemm_esc(m, m, cap_products=cap)  # warm per-lane jit
+    t_s, _ = _time_call(
+        lambda: [sg.spgemm_esc(m, m, cap_products=cap) for m in lanes],
+        repeat=2 if fast else 3)
+    _emit("dispatch.batched.esc", t_b,
+          f"lanes={len(lanes)}|sequential_us={t_s * 1e6:.1f}|"
+          f"speedup={t_s / t_b:.2f}")
+    if not fast:
+        t_z, _ = _time_call(
+            lambda: dp.spgemm_batched(A, A, engine="spz", R=16, impl="xla"))
+        _emit("dispatch.batched.spz", t_z, f"lanes={len(lanes)}")
+
+
 ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,
        "fig11": fig11, "table4": table4, "moe": moe_bench,
-       "kernels": kernels_bench}
+       "kernels": kernels_bench, "dispatch": dispatch_bench}
+
+_NEEDS_MATS = ("table3", "fig8", "fig9", "fig10", "fig11", "dispatch")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("which", nargs="*", default=list(ALL))
+    ap.add_argument("which", nargs="*", default=list(ALL), choices=list(ALL),
+                    metavar="section")
     ap.add_argument("--fast", action="store_true",
-                    help="skip the slow spz wall-time runs in fig8")
+                    help="skip the slow spz wall-time runs in fig8/dispatch")
     ap.add_argument("--limit", type=int, default=None,
                     help="first N matrices only")
     args = ap.parse_args()
     mats = None
     for name in args.which:
         fn = ALL[name]
-        if name in ("table3", "fig8", "fig9", "fig10", "fig11"):
+        if name in _NEEDS_MATS:
             if mats is None:
                 mats = [(n, datasets.build(n))
                         for n in datasets.names(args.limit)]
-            if name == "fig8":
+            if name in ("fig8", "dispatch"):
                 fn(mats, fast=args.fast)
             else:
                 fn(mats)
         else:
             fn()
+        _flush_json(name)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import spgemm as sg
-from repro.core.formats import random_sparse, EMPTY
+from repro.core.formats import random_sparse
 from repro.kernels import ops
 
 # --- 1. the zipper primitives -------------------------------------------

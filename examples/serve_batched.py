@@ -1,5 +1,6 @@
 """Serving example: batched prefill+decode with the engine, greedy and
-top-k sampling, plus the zipper top-k merge over vocab shards.
+top-k sampling, the zipper top-k merge over vocab shards, and a ragged
+SpGEMM request batch served through the density-aware engine registry.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,6 +10,8 @@ import jax
 import numpy as np
 
 from repro.configs import base as cb
+from repro.core import dispatch, spgemm as sg
+from repro.core.formats import batch_csr, random_sparse
 from repro.models import model as M
 from repro.serving.engine import Engine, Request
 from repro.serving.sampler import zipper_topk
@@ -39,6 +42,23 @@ def main():
     assert set(ids) == set(np.argsort(full)[::-1][:8])
     print("zipper top-k over 4 vocab shards matches global top-k:",
           ids.tolist())
+
+    # SpGEMM serving path: a ragged batch of sparse multiply requests
+    # (different densities, different nnz) packed into one BatchedCSR and
+    # executed under a single compilation via the engine registry.
+    mats = [random_sparse(128, 128, d, seed=i)
+            for i, d in enumerate((0.005, 0.02, 0.01))]
+    A = batch_csr(mats, batch_cap=4)  # one padded lane, ready for a 4th req
+    t0 = time.time()
+    out = dispatch.spgemm_batched(A, A, engine="auto")
+    dt = time.time() - t0
+    for i, m in enumerate(mats):
+        want = np.asarray(sg.spgemm_scl_array(m, m).to_dense())
+        got = np.asarray(out[i].to_dense())
+        assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+    print(f"spgemm_batched: {len(mats)} ragged requests (+1 padding lane) "
+          f"in {dt:.2f}s incl. compile; lanes match scl-array oracle; "
+          f"valid={np.asarray(out.valid).tolist()}")
 
 
 if __name__ == "__main__":

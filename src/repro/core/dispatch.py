@@ -1,0 +1,453 @@
+"""SpGEMM engine registry, density-aware dispatch, and batched execution.
+
+The paper's central observation (Table III / Fig. 8) is that no single
+SpGEMM strategy wins everywhere: scalar hash accumulation, vectorized
+Expand-Sort-Compress, and the SparseZipper merge path trade off by density,
+per-row work, and work skew. This module turns the five free functions in
+``core/spgemm.py`` into a serving-grade engine layer:
+
+  * a **registry** of named engines with declared capabilities (jittable,
+    returns-stats, batchable, dtype support) — new engines plug in via
+    :func:`register_engine`;
+  * :func:`spgemm` — ``spgemm(A, B, engine="auto")`` picks an engine from
+    cheap structural features (density, avg work/row, per-group work
+    variance) through an overridable heuristic table, or by one-shot
+    measurement (``autotune=True``);
+  * an **autotune cache** persisted to disk and keyed by shape/nnz bucket,
+    so repeated shapes (the serving steady state) skip re-selection;
+  * :func:`spgemm_batched` — runs a whole :class:`BatchedCSR` batch through
+    a jittable engine under one compilation: ``esc`` via a vmapped core,
+    ``spz`` via a lock-step driver that packs rows from every batch lane
+    into shared fixed-capacity stream groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+import json
+import math
+import os
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import spgemm as sg
+from repro.core.formats import (BatchedCSR, CSR, batch_csr, csr_from_coo,
+                                csr_to_numpy)
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A registered SpGEMM engine and its declared capabilities.
+
+    ``fn(A, B, **kw)`` returns a CSR, or ``(CSR, stats)`` when
+    ``returns_stats``. ``jittable`` engines lower to one XLA computation
+    with static capacities; ``batchable`` engines additionally support the
+    single-compilation :func:`spgemm_batched` path."""
+
+    name: str
+    fn: Callable
+    jittable: bool = False
+    returns_stats: bool = False
+    batchable: bool = False
+    dtypes: tuple = ("float32",)
+    description: str = ""
+
+
+_REGISTRY: dict[str, EngineSpec] = {}
+
+
+def register_engine(name: str, fn: Callable, **caps) -> EngineSpec:
+    """Register (or replace) an engine under ``name``; see EngineSpec."""
+    spec = EngineSpec(name=name, fn=fn, **caps)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_engine(name: str) -> EngineSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_engines() -> dict[str, EngineSpec]:
+    """Snapshot of the registry (name -> spec)."""
+    return dict(_REGISTRY)
+
+
+register_engine("scl-array", sg.spgemm_scl_array,
+                description="scalar row loop, dense accumulator row (oracle)")
+register_engine("scl-hash", sg.spgemm_scl_hash,
+                description="scalar row loop, hash-style unique/accumulate")
+register_engine("esc", sg.spgemm_esc, jittable=True, batchable=True,
+                description="vectorized Expand-Sort-Compress (vec-radix)")
+register_engine("spz", lambda A, B, **kw: sg.spgemm_spz(A, B, **kw),
+                jittable=True, returns_stats=True, batchable=True,
+                description="SparseZipper chunked stream sort + zip-merge")
+register_engine("spz-rsort",
+                lambda A, B, **kw: sg.spgemm_spz(A, B, rsort=True, **kw),
+                jittable=True, returns_stats=True, batchable=True,
+                description="spz with rows pre-sorted by per-row work")
+
+
+# ---------------------------------------------------------------------------
+# features + heuristic table
+# ---------------------------------------------------------------------------
+
+def extract_features(A: CSR, B: CSR, group: int = 16) -> dict:
+    """Cheap structural features driving engine choice (Table III columns)."""
+    return sg.work_stats(A, B, group=group)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicRule:
+    """First matching rule wins; ``predicate`` maps a feature dict to bool."""
+
+    name: str
+    predicate: Callable[[dict], bool]
+    engine: str
+
+
+# Ordered density-regime table (paper §V-B intuition):
+#   tiny total work      -> scalar hash: vectorized setup cost dominates;
+#   dense / heavy rows   -> esc: expansion+radix amortizes, one XLA graph;
+#   high work skew       -> spz-rsort: work-sorted rows fix lock-step
+#                           imbalance (Fig. 9);
+#   everything else      -> spz merge path (duplicates drop out early).
+DEFAULT_HEURISTICS: tuple[HeuristicRule, ...] = (
+    HeuristicRule("tiny-work", lambda f: f["total_work"] < 2048
+                  and f["density"] < 2e-3, "scl-hash"),
+    HeuristicRule("dense", lambda f: f["density"] >= 1.5e-2
+                  or f["avg_work_per_row"] >= 128.0, "esc"),
+    HeuristicRule("skewed", lambda f: f["work_var_per_group"] >= 1.0,
+                  "spz-rsort"),
+    HeuristicRule("default", lambda f: True, "spz"),
+)
+
+
+def choose_engine(feats: dict,
+                  rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                  ) -> tuple[str, str]:
+    """Return (engine_name, rule_name) for a feature dict."""
+    for rule in rules:
+        if rule.predicate(feats):
+            return rule.engine, rule.name
+    raise ValueError("no heuristic rule matched (missing default rule?)")
+
+
+# ---------------------------------------------------------------------------
+# persistent autotune cache
+# ---------------------------------------------------------------------------
+
+def _nnz_bucket(m: CSR) -> int:
+    """log2 bucket of true nnz — shapes in the same bucket share a plan."""
+    return int(np.asarray(m.indptr)[-1]).bit_length()
+
+
+def cache_key(A: CSR, B: CSR) -> str:
+    return (f"{A.n_rows}x{A.n_cols}@{_nnz_bucket(A)}"
+            f"*{B.n_rows}x{B.n_cols}@{_nnz_bucket(B)}")
+
+
+class AutotuneCache:
+    """Disk-backed map cache_key -> {engine, source}.
+
+    ``source`` records how the entry was made: "heuristic" entries are
+    upgraded in place by a later ``autotune=True`` call; "autotune" entries
+    are sticky. Default path: ``$REPRO_AUTOTUNE_CACHE`` or
+    ``~/.cache/repro/spgemm_autotune.json``. Writes are atomic
+    (tmp + rename); a corrupt/missing file starts empty."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or os.environ.get(
+            "REPRO_AUTOTUNE_CACHE",
+            os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                         "spgemm_autotune.json"))
+        self._entries: Optional[dict] = None
+
+    def _load(self) -> dict:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                self._entries = data if isinstance(data, dict) else {}
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._load().get(key)
+
+    def put(self, key: str, engine: str, source: str) -> None:
+        self._load()[key] = {"engine": engine, "source": source}
+        self._flush()
+
+    def _flush(self) -> None:
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        try:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(self._entries, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            # cache is an optimization; never fail the multiply over it
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def clear(self) -> None:
+        self._entries = {}
+        self._flush()
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+_default_cache: Optional[AutotuneCache] = None
+
+
+def default_cache() -> AutotuneCache:
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = AutotuneCache()
+    return _default_cache
+
+
+def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1) -> float:
+    best = math.inf
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = spec.fn(A, B)
+        if spec.returns_stats:
+            out = out[0]
+        jax.block_until_ready(out.data)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# dispatch entry points
+# ---------------------------------------------------------------------------
+
+def _filter_kwargs(fn: Callable, kw: dict) -> dict:
+    """Keep only kwargs ``fn`` accepts (everything, if it takes **kw).
+
+    Auto-selection may route to any engine, so engine-specific kwargs
+    (e.g. spz's ``R``) must not crash a run that picked a different
+    engine; explicitly named engines still get strict kwargs."""
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):
+        return kw
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return kw
+    names = {p.name for p in params}
+    return {k: v for k, v in kw.items() if k in names}
+
+
+def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
+           autotune: bool = False,
+           cache: Optional[AutotuneCache] = None,
+           rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+           return_stats: bool = False,
+           **kw):
+    """Multiply two padded CSR matrices through the engine registry.
+
+    engine:  a registered name, or "auto" to select by cached plan /
+             heuristic features / measurement.
+    autotune: with engine="auto", time every registered engine on this
+             input once and cache the winner for the shape/nnz bucket.
+    cache:   AutotuneCache override (default: process-wide disk cache).
+             Non-default ``rules`` bypass the cache entirely — a cached
+             plan from other rules must not shadow the caller's table,
+             nor may a custom-rule choice poison the shared cache.
+    return_stats: also return the engine's stats object (None for engines
+             without ``returns_stats``).
+    """
+    if A.n_cols != B.n_rows:
+        raise ValueError(f"inner dims differ: {A.shape} @ {B.shape}")
+    selected = engine
+    if engine == "auto":
+        use_cache = rules is DEFAULT_HEURISTICS
+        if cache is None:  # NB: `or` would drop an *empty* caller cache
+            cache = default_cache()
+        key = cache_key(A, B)
+        hit = cache.get(key) if use_cache else None
+        if hit is not None and (hit["source"] == "autotune" or not autotune):
+            selected = hit["engine"]
+        elif autotune:
+            timings = {name: _measure(spec, A, B)
+                       for name, spec in _REGISTRY.items()}
+            selected = min(timings, key=timings.get)
+            cache.put(key, selected, "autotune")
+        else:
+            selected, _rule = choose_engine(extract_features(A, B), rules)
+            if use_cache:
+                cache.put(key, selected, "heuristic")
+    spec = get_engine(selected)
+    out = spec.fn(A, B, **(_filter_kwargs(spec.fn, kw)
+                           if engine == "auto" else kw))
+    out, stats = out if spec.returns_stats else (out, None)
+    return (out, stats) if return_stats else out
+
+
+def explain(A: CSR, B: CSR,
+            rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS) -> dict:
+    """Dry-run selection: features + the rule and engine 'auto' would pick
+    (ignoring any cached plan) — for benchmarks and debugging."""
+    feats = extract_features(A, B)
+    engine, rule = choose_engine(feats, rules)
+    return {"engine": engine, "rule": rule, "features": feats,
+            "cache_key": cache_key(A, B)}
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+# vmapped unjitted ESC core, jitted once over the whole batch: every lane
+# shares the static (cap_products, n_rows, n_cols) plan.
+_esc_batched_core = jax.jit(
+    jax.vmap(sg._esc_core_impl,
+             in_axes=(0, 0, 0, 0, 0, 0, None, None, None)),
+    static_argnums=(6, 7, 8))
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(4, int(n - 1).bit_length())
+
+
+def _esc_batched(A: BatchedCSR, B: BatchedCSR,
+                 cap_products: Optional[int] = None) -> list:
+    """One-compilation ESC over a batch: shared power-of-two product
+    capacity so ragged batches of similar size reuse the same XLA plan."""
+    if cap_products is None:
+        works = [int(sg.row_work(a, B[i]).sum()) for i, a in A.lanes()]
+        cap_products = _pow2_at_least(max(works + [1]))
+    r, c, v, valid, _ = _esc_batched_core(
+        A.indptr, A.indices, A.data, B.indptr, B.indices, B.data,
+        cap_products, A.n_rows, B.n_cols)
+    r, c, v, valid = map(np.asarray, (r, c, v, valid))
+    lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
+    return [csr_from_coo(r[i][valid[i]], c[i][valid[i]], v[i][valid[i]],
+                         (A.n_rows, B.n_cols)) if lane_ok[i] else None
+            for i in range(A.batch)]
+
+
+def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
+                 S: Optional[int] = None, rsort: bool = False,
+                 impl: str = "auto") -> list:
+    """Batched SparseZipper driver: rows from *every* valid lane are packed
+    into shared lock-step groups of S streams, and every chunk kernel issue
+    is padded to the static (S, R) capacity — the whole batch runs under
+    one sort/merge compilation instead of one per matrix size."""
+    S = S or 32 * R
+    stats = sg.SpzStats()
+    lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
+    lanes = {}
+    items = []  # (lane, row) work items, lane-major
+    for i in range(A.batch):
+        if not lane_ok[i]:
+            continue
+        lanes[i] = (csr_to_numpy(A[i]), csr_to_numpy(B[i]))
+        items.extend((i, r) for r in range(A.n_rows))
+    if rsort:
+        work = {i: sg.row_work(A[i], B[i]) for i in lanes}
+        items.sort(key=lambda it: int(work[it[0]][it[1]]))
+    out_k = {it: np.empty(0, np.int32) for it in items}
+    out_v = {it: np.empty(0, np.float32) for it in items}
+    for g0 in range(0, len(items), S):
+        group = items[g0:g0 + S]
+        products = []
+        for lane, row in group:
+            (a_indptr, a_idx, a_val), (b_indptr, b_idx, b_val) = lanes[lane]
+            products.extend(sg._expand_group(
+                [row], a_indptr, a_idx, a_val, b_indptr, b_idx, b_val))
+        parts = sg._sort_phase(products, R, len(group), impl, stats, cap_s=S)
+        final = sg._merge_tree(parts, R, impl, stats, cap_s=S)
+        if final is not None:
+            Kf, Vf, lf = final
+            for s, it in enumerate(group):
+                out_k[it] = Kf[s, :lf[s]]
+                out_v[it] = Vf[s, :lf[s]]
+    results = []
+    for i in range(A.batch):
+        if not lane_ok[i]:
+            results.append(None)
+            continue
+        rr, cc, vv = [], [], []
+        for row in range(A.n_rows):
+            k, v = out_k[(i, row)], out_v[(i, row)]
+            nz = v != 0.0
+            rr.append(np.full(int(nz.sum()), row, np.int64))
+            cc.append(k[nz])
+            vv.append(v[nz])
+        results.append(csr_from_coo(
+            np.concatenate(rr) if rr else [],
+            np.concatenate(cc) if cc else [],
+            np.concatenate(vv) if vv else [], (A.n_rows, B.n_cols)))
+    return results
+
+
+# auto selection for batches maps any single-matrix choice onto the nearest
+# batchable engine (the scalar engines have no single-compilation path)
+_BATCH_FALLBACK = {"scl-array": "esc", "scl-hash": "esc"}
+
+
+def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
+                   rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                   **kw) -> BatchedCSR:
+    """Multiply a batch of same-shape CSR pairs under one compilation.
+
+    engine: "esc", "spz", "spz-rsort", or "auto" (features of the heaviest
+    valid lane pick the engine, then map onto a batchable one). Invalid
+    lanes pass through as empty matrices with ``valid=False``. Returns a
+    BatchedCSR whose lane capacity is the max output nnz."""
+    if A.batch != B.batch or A.n_cols != B.n_rows:
+        raise ValueError(f"batch mismatch: {A.batch}x{A.shape} @ "
+                         f"{B.batch}x{B.shape}")
+    lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
+    if not lane_ok.any():
+        raise ValueError("no valid lanes in batch")
+    selected = engine
+    if engine == "auto":
+        i_heavy = max((i for i, _ in A.lanes()),
+                      key=lambda i: int(np.asarray(A[i].indptr)[-1]))
+        selected, _ = choose_engine(
+            extract_features(A[i_heavy], B[i_heavy]), rules)
+    remapped = _BATCH_FALLBACK.get(selected, selected)
+    spec = get_engine(remapped)
+    if not spec.batchable:
+        raise ValueError(f"engine {remapped!r} has no batched path")
+    if remapped == "esc":
+        driver = _esc_batched
+    elif remapped == "spz":
+        driver = _spz_batched
+    elif remapped == "spz-rsort":
+        driver = functools.partial(_spz_batched, rsort=True)
+    else:
+        raise ValueError(f"engine {remapped!r} declared batchable but has "
+                         "no batched driver")
+    # auto selection / fallback remap may land on any driver: drop kwargs
+    # it can't take (explicitly named engines keep strict kwargs)
+    if engine == "auto" or remapped != engine:
+        kw = _filter_kwargs(driver, kw)
+    outs = driver(A, B, **kw)
+    empty = csr_from_coo([], [], [], (A.n_rows, B.n_cols))
+    cap = max(int(np.asarray(o.indptr)[-1]) for o in outs if o is not None)
+    batched = batch_csr([o if o is not None else empty for o in outs],
+                        nnz_cap=max(cap, 1))
+    return BatchedCSR(batched.indptr, batched.indices, batched.data,
+                      jnp.asarray(A.valid) & jnp.asarray(B.valid), batched.shape)

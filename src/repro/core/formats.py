@@ -71,6 +71,111 @@ class CSR:
         return out.at[r, c].add(v)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BatchedCSR:
+    """A batch of same-shape CSR matrices with one shared static capacity.
+
+    All lanes share ``shape`` and ``nnz_cap`` so the whole batch lowers to
+    three dense arrays — the layout the batched SpGEMM engines compile once
+    for and reuse across requests:
+
+      ``indptr``  (batch, n_rows+1) int32
+      ``indices`` (batch, nnz_cap)  int32, padding = EMPTY
+      ``data``    (batch, nnz_cap)  float, padding = 0
+      ``valid``   (batch,)          bool — lane validity mask; padding lanes
+                  (added to round a ragged batch up to a fixed batch size)
+                  hold empty matrices and must be ignored by consumers.
+    """
+
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+    data: jnp.ndarray
+    valid: jnp.ndarray
+    shape: Tuple[int, int]
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.data, self.valid), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    # -- properties ------------------------------------------------------
+    @property
+    def batch(self) -> int:
+        return int(self.indptr.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_cap(self) -> int:
+        return int(self.indices.shape[1])
+
+    @property
+    def n_valid(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+    def __len__(self) -> int:
+        return self.batch
+
+    def __getitem__(self, i: int) -> CSR:
+        """Extract lane ``i`` as a standalone CSR (shared capacity kept)."""
+        return CSR(self.indptr[i], self.indices[i], self.data[i], self.shape)
+
+    def lanes(self):
+        """Iterate (index, CSR) over valid lanes only."""
+        valid = np.asarray(self.valid)
+        for i in range(self.batch):
+            if valid[i]:
+                yield i, self[i]
+
+
+def batch_csr(mats, nnz_cap: int | None = None,
+              batch_cap: int | None = None) -> BatchedCSR:
+    """Stack same-shape CSR matrices into a BatchedCSR.
+
+    ``nnz_cap``/``batch_cap`` pad capacity/lane-count up to fixed sizes so
+    ragged request batches reuse one compiled kernel; defaults are the
+    batch maxima (no padding lanes)."""
+    if not mats:
+        raise ValueError("batch_csr needs at least one matrix")
+    shape = mats[0].shape
+    for m in mats:
+        if m.shape != shape:
+            raise ValueError(f"shape mismatch in batch: {m.shape} != {shape}")
+    nnzs = [int(np.asarray(m.indptr)[-1]) for m in mats]
+    cap = nnz_cap if nnz_cap is not None else max(max(nnzs), 1)
+    if cap < max(nnzs):
+        raise ValueError(f"nnz_cap {cap} < batch max nnz {max(nnzs)}")
+    bcap = batch_cap if batch_cap is not None else len(mats)
+    if bcap < len(mats):
+        raise ValueError(f"batch_cap {bcap} < batch size {len(mats)}")
+    indptr = np.zeros((bcap, shape[0] + 1), np.int32)
+    indices = np.full((bcap, cap), EMPTY, np.int32)
+    data = np.zeros((bcap, cap), np.float32)
+    valid = np.zeros(bcap, bool)
+    for i, m in enumerate(mats):
+        indptr[i] = np.asarray(m.indptr)
+        indices[i, :nnzs[i]] = np.asarray(m.indices)[:nnzs[i]]
+        data[i, :nnzs[i]] = np.asarray(m.data)[:nnzs[i]]
+        valid[i] = True
+    return BatchedCSR(jnp.asarray(indptr), jnp.asarray(indices),
+                      jnp.asarray(data), jnp.asarray(valid), shape)
+
+
+def unbatch_csr(b: BatchedCSR):
+    """Valid lanes of a BatchedCSR as a list of CSR matrices."""
+    return [m for _, m in b.lanes()]
+
+
 def row_ids_from_indptr(indptr: jnp.ndarray, cap: int) -> jnp.ndarray:
     """Expand CSR indptr into per-entry row ids (length ``cap``)."""
     n_rows = indptr.shape[0] - 1

@@ -130,9 +130,8 @@ def spgemm_scl_hash(A: CSR, B: CSR) -> CSR:
 # ESC (vec-radix analogue) — fully jittable with static capacities
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cap_products", "n_rows", "n_cols"))
-def _esc_core(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
-              cap_products: int, n_rows: int, n_cols: int):
+def _esc_core_impl(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
+                   cap_products: int, n_rows: int, n_cols: int):
     nnz_a_cap = a_idx.shape[0]
     # --- expansion: product p belongs to A-entry t = searchsorted(Wcum, p)
     a_rows = row_ids_from_indptr(a_indptr, nnz_a_cap)
@@ -169,6 +168,12 @@ def _esc_core(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
     valid_out = (out_r < n_rows) & (out_v != 0.0)
     n_out = jnp.sum(valid_out, dtype=jnp.int32)
     return out_r, out_c, out_v, valid_out, n_out
+
+
+# jitted single-matrix entry; the unjitted _esc_core_impl is vmapped by the
+# batched dispatch path (core/dispatch.py) so a whole batch shares one jit
+_esc_core = functools.partial(
+    jax.jit, static_argnames=("cap_products", "n_rows", "n_cols"))(_esc_core_impl)
 
 
 def spgemm_esc(A: CSR, B: CSR, cap_products: int | None = None) -> CSR:
@@ -227,7 +232,7 @@ def _expand_group(rows, a_indptr, a_idx, a_val, b_indptr, b_idx, b_val):
     return out
 
 
-def _sort_phase(products, R, S, impl, stats: SpzStats):
+def _sort_phase(products, R, S, impl, stats: SpzStats, cap_s=None):
     """Chunk-sort every stream's products into sorted unique partitions.
 
     Returns a list of partitions; partition p = (keys (S, R), vals (S, R),
@@ -249,7 +254,8 @@ def _sort_phase(products, R, S, impl, stats: SpzStats):
             break
         keys = K[:, c * R:(c + 1) * R]
         vals = V[:, c * R:(c + 1) * R]
-        ok, ov, ol = kvstream.sort_chunks(keys, vals, lens, impl=impl)
+        ok, ov, ol = kvstream.sort_chunks(keys, vals, lens, impl=impl,
+                                          cap_s=cap_s)
         stats.n_mssort += 1
         stats.sort_elems += int(lens.sum())
         stats.chunk_loads += 1
@@ -283,7 +289,7 @@ def _put_rows(K, V, optr, src_k, src_v, n):
     V[rows, idx[ok]] = src_v[ok]
 
 
-def _merge_round(A, B, R, impl, stats: SpzStats):
+def _merge_round(A, B, R, impl, stats: SpzStats, cap_s=None):
     """Merge partition pair lock-step across streams, chunk by chunk.
     A, B: (keys (S, La), vals, lens (S,)) padded partitions.
     Returns merged (keys (S, La+Lb), vals, lens)."""
@@ -303,7 +309,8 @@ def _merge_round(A, B, R, impl, stats: SpzStats):
             break
         ka, va, la = _take_chunk(Ka, Va, np.where(both, lensA, 0), pa, R)
         kb, vb, lb = _take_chunk(Kb, Vb, np.where(both, lensB, 0), pb, R)
-        res = kvstream.merge_chunks(ka, va, la, kb, vb, lb, impl=impl)
+        res = kvstream.merge_chunks(ka, va, la, kb, vb, lb, impl=impl,
+                                    cap_s=cap_s)
         klo, vlo, khi, vhi, ca, cb, ol = map(np.asarray, res)
         stats.n_mszip += 1
         stats.zip_elems += int(la.sum() + lb.sum())
@@ -332,6 +339,20 @@ def _merge_round(A, B, R, impl, stats: SpzStats):
     return Ko, Vo, optr.astype(np.int64)
 
 
+def _merge_tree(parts, R, impl, stats: SpzStats, cap_s=None):
+    """Zip-merge tree: halve partition count per round, lock-step.
+    Returns the single surviving partition (keys, vals, lens) or None."""
+    while len(parts) > 1:
+        nxt = []
+        for j in range(0, len(parts) - 1, 2):
+            nxt.append(_merge_round(parts[j], parts[j + 1], R, impl, stats,
+                                    cap_s=cap_s))
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0] if parts else None
+
+
 def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
                rsort: bool = False, impl: str = "auto"):
     """Merge-based SpGEMM using the SparseZipper primitives.
@@ -357,24 +378,20 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
     for g0 in range(0, A.n_rows, S):
         rows = order[g0:g0 + S]
         Sg = len(rows)
+        # pad chunk-kernel issues to the next pow2 >= Sg (capped at S):
+        # bounds the number of distinct compiled shapes without inflating
+        # a small matrix's groups all the way to S streams
+        cap_g = min(S, 1 << max(0, Sg - 1).bit_length())
         t1 = _time.perf_counter()
         products = _expand_group(rows, a_indptr, a_idx, a_val,
                                  b_indptr, b_idx, b_val)
         t2 = _time.perf_counter()
         stats.t_expand += t2 - t1
-        parts = _sort_phase(products, R, Sg, impl, stats)
-        # zip-merge tree: halve partition count per round, lock-step
-        while len(parts) > 1:
-            nxt = []
-            for j in range(0, len(parts) - 1, 2):
-                nxt.append(_merge_round(parts[j], parts[j + 1], R, impl,
-                                        stats))
-            if len(parts) % 2:
-                nxt.append(parts[-1])
-            parts = nxt
+        parts = _sort_phase(products, R, Sg, impl, stats, cap_s=cap_g)
+        final = _merge_tree(parts, R, impl, stats, cap_s=cap_g)
         stats.t_sort += _time.perf_counter() - t2
-        if parts:
-            Kf, Vf, lf = parts[0]
+        if final is not None:
+            Kf, Vf, lf = final
             for s, i in enumerate(rows):
                 out_rows_k[i] = Kf[s, :lf[s]]
                 out_rows_v[i] = Vf[s, :lf[s]]
@@ -397,7 +414,10 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
 
 
 def spgemm(A: CSR, B: CSR, method: str = "spz", **kw):
-    """Dispatch front-end."""
+    """Legacy dispatch front-end (core.dispatch.spgemm is the real one)."""
+    if method == "auto":
+        from repro.core import dispatch
+        return dispatch.spgemm(A, B, engine="auto", **kw)
     if method == "scl-array":
         return spgemm_scl_array(A, B)
     if method == "scl-hash":

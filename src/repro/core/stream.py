@@ -17,17 +17,17 @@ from repro.core.formats import EMPTY
 from repro.kernels import ops
 
 
-def sort_chunks(keys, vals, lens, *, impl="auto"):
+def sort_chunks(keys, vals, lens, *, impl="auto", cap_s=None):
     """mssortk+mssortv over S lock-step streams."""
     return ops.stream_sort(jnp.asarray(keys), jnp.asarray(vals),
-                           jnp.asarray(lens), impl=impl)
+                           jnp.asarray(lens), impl=impl, cap_s=cap_s)
 
 
-def merge_chunks(ka, va, la, kb, vb, lb, *, impl="auto"):
+def merge_chunks(ka, va, la, kb, vb, lb, *, impl="auto", cap_s=None):
     """mszipk+mszipv over S lock-step streams."""
     return ops.stream_merge(jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
                             jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
-                            impl=impl)
+                            impl=impl, cap_s=cap_s)
 
 
 def gather_chunk_fronts(parts_k, parts_v, ptrs, R):

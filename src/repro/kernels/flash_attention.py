@@ -91,7 +91,8 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, bq=128,
     vr = v.transpose(0, 2, 1, 3).reshape(B * KVH, Skp, hd)
     nq, nk = Sqp // bq, Skp // bk
 
-    kv_row = lambda bh: (bh // H) * KVH + (bh % H) // G
+    def kv_row(bh):
+        return (bh // H) * KVH + (bh % H) // G
 
     from jax.experimental.pallas import tpu as pltpu
     out = pl.pallas_call(

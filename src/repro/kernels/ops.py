@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import EMPTY
 from repro.kernels import ref
 from repro.kernels.stream_sort import stream_sort_pallas
 from repro.kernels.stream_merge import stream_merge_pallas
@@ -32,23 +33,53 @@ def _resolve(impl: str) -> str:
     return impl
 
 
-def stream_sort(keys, vals, lens, *, impl: str = "auto", block_s: int = 8):
-    """mssortk+mssortv: sort/combine/compress S key-value chunks."""
+def _pad_streams(cap_s, keys, vals, lens):
+    """Pad the stream axis up to a fixed capacity ``cap_s``.
+
+    Batched drivers issue many chunk kernels whose stream count S varies
+    (ragged tail groups, per-chunk participation); padding every issue to
+    one static (cap_s, R) shape keeps a single XLA/Pallas compilation live
+    across the whole batch instead of one per distinct S."""
+    S = keys.shape[0]
+    if cap_s is None or cap_s <= S:
+        return keys, vals, lens, S
+    pad = cap_s - S
+    keys = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=EMPTY)
+    vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    lens = jnp.pad(lens, (0, pad))
+    return keys, vals, lens, S
+
+
+def stream_sort(keys, vals, lens, *, impl: str = "auto", block_s: int = 8,
+                cap_s: int | None = None):
+    """mssortk+mssortv: sort/combine/compress S key-value chunks.
+
+    ``cap_s``: optional static stream-count capacity; inputs with S < cap_s
+    are padded up so every call shares one compiled kernel."""
+    keys, vals, lens, S = _pad_streams(cap_s, keys, vals, lens)
     impl = _resolve(impl)
     if impl == "pallas":
-        return stream_sort_pallas(keys, vals, lens, block_s=block_s,
-                                  interpret=not _on_tpu())
-    return _sort_ref(keys, vals, lens)
+        ok, ov, ol = stream_sort_pallas(keys, vals, lens, block_s=block_s,
+                                        interpret=not _on_tpu())
+    else:
+        ok, ov, ol = _sort_ref(keys, vals, lens)
+    return ok[:S], ov[:S], ol[:S]
 
 
 def stream_merge(ka, va, la, kb, vb, lb, *, impl: str = "auto",
-                 block_s: int = 8):
-    """mszipk+mszipv: merge two sorted chunks per stream."""
+                 block_s: int = 8, cap_s: int | None = None):
+    """mszipk+mszipv: merge two sorted chunks per stream.
+
+    ``cap_s``: as in :func:`stream_sort` — static stream-count capacity."""
+    ka, va, la, S = _pad_streams(cap_s, ka, va, la)
+    kb, vb, lb, _ = _pad_streams(cap_s, kb, vb, lb)
     impl = _resolve(impl)
     if impl == "pallas":
-        return stream_merge_pallas(ka, va, la, kb, vb, lb, block_s=block_s,
+        outs = stream_merge_pallas(ka, va, la, kb, vb, lb, block_s=block_s,
                                    interpret=not _on_tpu())
-    return _merge_ref(ka, va, la, kb, vb, lb)
+    else:
+        outs = _merge_ref(ka, va, la, kb, vb, lb)
+    return tuple(o[:S] for o in outs)
 
 
 def sort_tokens_by_key(keys, *, impl: str = "auto"):

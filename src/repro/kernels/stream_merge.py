@@ -75,9 +75,14 @@ def stream_merge_pallas(ka, va, la, kb, vb, lb, *, block_s: int = 8,
     block_s = min(block_s, S)
     pad = (-S) % block_s
     if pad:
-        pk = lambda x: jnp.pad(x, ((0, pad), (0, 0)), constant_values=EMPTY)
-        pv = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
-        pl_ = lambda x: jnp.pad(x, (0, pad))
+        def pk(x):
+            return jnp.pad(x, ((0, pad), (0, 0)), constant_values=EMPTY)
+
+        def pv(x):
+            return jnp.pad(x, ((0, pad), (0, 0)))
+
+        def pl_(x):
+            return jnp.pad(x, (0, pad))
         ka, va, kb, vb = pk(ka), pv(va), pk(kb), pv(vb)
         la, lb = pl_(la), pl_(lb)
     Sp = S + pad

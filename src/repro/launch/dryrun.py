@@ -22,7 +22,6 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 """
 import argparse
-import functools
 import json
 import re
 import sys

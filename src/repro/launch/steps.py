@@ -16,7 +16,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
 from repro.models import model as M
-from repro.models.model import STACKED_RE
 from repro.optim import adamw
 
 

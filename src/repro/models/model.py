@@ -11,7 +11,6 @@ Param tree layout (paths drive the sharding rules):
 """
 from __future__ import annotations
 
-import functools
 import re
 
 import jax

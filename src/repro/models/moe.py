@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
 from repro.kernels import ops as kops
-from repro.models.layers import dense, dense_init, mlp, mlp_init
+from repro.models.layers import dense_init, mlp, mlp_init
 
 
 def moe_init(key, cfg, dtype):

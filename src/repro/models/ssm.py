@@ -8,7 +8,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distributed import sharding as shd
 from repro.models.layers import dense, dense_init
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,6 @@ Cache entries per kind:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +24,8 @@ from repro.distributed import sharding as shd
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
-from repro.models.layers import (cross_entropy, dense, dense_init,
-                                 embed_init, embed_lookup, logits_head,
-                                 mlp, mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.layers import (dense, mlp, mlp_init, rmsnorm,
+                                 rmsnorm_init)
 
 
 def _dtype(cfg):

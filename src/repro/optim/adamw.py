@@ -4,7 +4,6 @@ accumulation. No external deps (optax is not assumed)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,8 @@ def schedule(cfg: AdamWConfig, step):
 
 def init_state(cfg: AdamWConfig, params):
     dt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree_util.tree_map(zeros, params),

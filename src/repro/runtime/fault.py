@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Optional
 
 log = logging.getLogger("repro.fault")

@@ -10,6 +10,10 @@ from repro.launch import steps as st
 from repro.models import model as M
 from repro.optim import adamw
 
+# one forward + one train step per architecture: dominated by XLA compiles
+# (5-20 s per arch) — slow lane only
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

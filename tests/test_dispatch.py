@@ -1,0 +1,278 @@
+"""Engine registry, density-aware auto dispatch, and batched execution.
+
+The acceptance contract: ``spgemm(A, B, engine="auto")`` must match the
+scl-array oracle everywhere and must pick *different* engines for at least
+two density regimes; ``spgemm_batched`` must equal per-matrix results for a
+ragged batch. Hypothesis property tests are skipped on a bare checkout.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import dispatch as dp
+from repro.core import spgemm as sg
+from repro.core.formats import BatchedCSR, batch_csr, random_sparse
+
+
+def _dense(m):
+    return np.asarray(m.to_dense(), np.float64)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    """Per-test autotune cache — keeps tests off the user-level disk cache."""
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_paper_engines():
+    names = set(dp.available_engines())
+    assert {"scl-array", "scl-hash", "esc", "spz", "spz-rsort"} <= names
+
+
+def test_register_and_unknown_engine():
+    spec = dp.register_engine("test-dummy", sg.spgemm_scl_array,
+                              description="test-only")
+    try:
+        assert dp.get_engine("test-dummy") is spec
+        A = random_sparse(16, 16, 0.05, seed=0)
+        out = dp.spgemm(A, A, engine="test-dummy")
+        np.testing.assert_allclose(_dense(out),
+                                   _dense(sg.spgemm_scl_array(A, A)))
+    finally:
+        dp._REGISTRY.pop("test-dummy", None)
+    with pytest.raises(ValueError, match="unknown engine"):
+        dp.get_engine("test-dummy")
+
+
+# ---------------------------------------------------------------------------
+# auto selection
+# ---------------------------------------------------------------------------
+
+# (regime, generator args) spanning the heuristic table's density regimes
+REGIMES = {
+    "tiny": dict(n=24, density=0.002, pattern="uniform"),
+    "dense": dict(n=64, density=0.05, pattern="uniform"),
+    "skewed": dict(n=96, density=0.02, pattern="powerlaw"),
+    "mid": dict(n=96, density=0.008, pattern="banded"),
+}
+
+
+def _regime_matrix(spec, seed=3):
+    return random_sparse(spec["n"], spec["n"], spec["density"], seed=seed,
+                         pattern=spec["pattern"])
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_auto_matches_oracle_per_regime(regime, cache):
+    A = _regime_matrix(REGIMES[regime])
+    want = _dense(sg.spgemm_scl_array(A, A))
+    got = _dense(dp.spgemm(A, A, engine="auto", cache=cache))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_auto_selects_different_engines_across_regimes():
+    chosen = {r: dp.explain(_regime_matrix(s), _regime_matrix(s))["engine"]
+              for r, s in REGIMES.items()}
+    assert len(set(chosen.values())) >= 2, chosen
+
+
+def test_explain_reports_features_and_rule():
+    A = _regime_matrix(REGIMES["dense"])
+    info = dp.explain(A, A)
+    assert info["engine"] in dp.available_engines()
+    assert {"density", "total_work", "avg_work_per_row"} <= set(
+        info["features"])
+    assert info["cache_key"] == dp.cache_key(A, A)
+
+
+def test_custom_rules_override():
+    A = _regime_matrix(REGIMES["dense"])
+    rules = (dp.HeuristicRule("always-hash", lambda f: True, "scl-hash"),)
+    assert dp.choose_engine(dp.extract_features(A, A), rules) == \
+        ("scl-hash", "always-hash")
+
+
+def test_custom_rules_bypass_cache(cache):
+    """A cached default-rules plan must not shadow caller rules, and a
+    custom-rules selection must not be written into the cache."""
+    A = _regime_matrix(REGIMES["dense"])  # default rules pick esc
+    dp.spgemm(A, A, engine="auto", cache=cache)
+    assert cache.get(dp.cache_key(A, A))["engine"] == "esc"
+    rules = (dp.HeuristicRule("always-hash", lambda f: True, "scl-hash"),)
+    out = dp.spgemm(A, A, engine="auto", cache=cache, rules=rules)
+    np.testing.assert_allclose(_dense(out),
+                               _dense(sg.spgemm_scl_array(A, A)),
+                               rtol=1e-4, atol=1e-4)
+    # cache entry untouched by the custom-rules call
+    assert cache.get(dp.cache_key(A, A)) == {"engine": "esc",
+                                             "source": "heuristic"}
+
+
+def test_auto_drops_engine_specific_kwargs(cache):
+    """spz kwargs must not crash an auto run that selects esc (and vice
+    versa); an explicitly named engine stays strict."""
+    A = _regime_matrix(REGIMES["dense"])  # auto -> esc
+    out = dp.spgemm(A, A, engine="auto", cache=cache, R=16, impl="xla")
+    np.testing.assert_allclose(_dense(out),
+                               _dense(sg.spgemm_scl_array(A, A)),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(TypeError):
+        dp.spgemm(A, A, engine="esc", R=16)
+    # batched: esc-only kwarg survives auto->spz-family remap
+    mats = _ragged_batch()
+    b = batch_csr(mats)
+    out = dp.spgemm_batched(b, b, engine="auto", cap_products=1 << 16)
+    for i, m in enumerate(mats):
+        np.testing.assert_allclose(_dense(out[i]),
+                                   _dense(sg.spgemm_scl_array(m, m)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_inner_dim_mismatch_raises():
+    A = random_sparse(8, 9, 0.1, seed=0)
+    with pytest.raises(ValueError, match="inner dims"):
+        dp.spgemm(A, A, engine="scl-array")
+
+
+# ---------------------------------------------------------------------------
+# autotune cache
+# ---------------------------------------------------------------------------
+
+def test_heuristic_plan_is_cached_and_reused(cache):
+    A = _regime_matrix(REGIMES["mid"])
+    dp.spgemm(A, A, engine="auto", cache=cache)
+    key = dp.cache_key(A, A)
+    hit = cache.get(key)
+    assert hit is not None and hit["source"] == "heuristic"
+    # a same-bucket matrix reuses the plan from a fresh cache object (disk)
+    reread = dp.AutotuneCache(cache.path)
+    assert reread.get(key) == hit
+
+
+def test_autotune_measures_and_sticks(cache):
+    A = random_sparse(24, 24, 0.05, seed=1)
+    out = dp.spgemm(A, A, engine="auto", autotune=True, cache=cache)
+    np.testing.assert_allclose(_dense(out),
+                               _dense(sg.spgemm_scl_array(A, A)),
+                               rtol=1e-4, atol=1e-4)
+    hit = cache.get(dp.cache_key(A, A))
+    assert hit["source"] == "autotune"
+    assert hit["engine"] in dp.available_engines()
+    # a later non-autotune call must keep the measured plan
+    dp.spgemm(A, A, engine="auto", cache=cache)
+    assert cache.get(dp.cache_key(A, A)) == hit
+
+
+def test_corrupt_cache_file_starts_empty(tmp_path):
+    p = tmp_path / "autotune.json"
+    p.write_text("{not json")
+    c = dp.AutotuneCache(str(p))
+    assert len(c) == 0
+    c.put("k", "esc", "heuristic")
+    assert dp.AutotuneCache(str(p)).get("k") == {"engine": "esc",
+                                                 "source": "heuristic"}
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+def _ragged_batch(seed=0, n=48):
+    """Same shape, very different nnz per lane — the serving request mix."""
+    densities = (0.004, 0.05, 0.015, 0.03)
+    return [random_sparse(n, n, d, seed=seed + i)
+            for i, d in enumerate(densities)]
+
+
+@pytest.mark.parametrize("engine", ["esc", "spz", "spz-rsort", "auto"])
+def test_batched_equals_per_matrix(engine):
+    mats = _ragged_batch()
+    A = batch_csr(mats, batch_cap=len(mats) + 2)  # two padding lanes
+    kw = {"R": 8, "S": 32} if engine.startswith("spz") else {}
+    out = dp.spgemm_batched(A, A, engine=engine, **kw)
+    assert isinstance(out, BatchedCSR)
+    assert np.asarray(out.valid).tolist() == [True] * len(mats) + [False] * 2
+    for i, m in enumerate(mats):
+        want = _dense(sg.spgemm_scl_array(m, m))
+        np.testing.assert_allclose(_dense(out[i]), want, rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_batched_maps_scalar_engines_to_esc():
+    """Explicit scalar engine names fall back to the nearest batchable
+    engine instead of erroring — the serving path never hard-fails on a
+    heuristic that picked a scalar engine."""
+    mats = _ragged_batch()
+    A = batch_csr(mats)
+    out = dp.spgemm_batched(A, A, engine="scl-hash")
+    for i, m in enumerate(mats):
+        np.testing.assert_allclose(_dense(out[i]),
+                                   _dense(sg.spgemm_scl_array(m, m)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_batched_validates_shapes():
+    A = batch_csr(_ragged_batch(n=16))
+    B = batch_csr(_ragged_batch(n=32))
+    with pytest.raises(ValueError, match="batch mismatch"):
+        dp.spgemm_batched(A, B)
+
+
+def test_batch_csr_roundtrip_and_caps():
+    mats = _ragged_batch(n=20)
+    b = batch_csr(mats, nnz_cap=4096, batch_cap=8)
+    assert b.nnz_cap == 4096 and b.batch == 8 and b.n_valid == len(mats)
+    for i, m in enumerate(mats):
+        np.testing.assert_allclose(_dense(b[i]), _dense(m))
+    with pytest.raises(ValueError, match="nnz_cap"):
+        batch_csr(mats, nnz_cap=1)
+    with pytest.raises(ValueError, match="batch_cap"):
+        batch_csr(mats, batch_cap=1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def regime_matrix(draw):
+        """Random matrices spanning all density regimes the heuristic
+        distinguishes, so 'auto' exercises every engine."""
+        n = draw(st.integers(8, 48))
+        density = draw(st.sampled_from([0.002, 0.01, 0.03, 0.08, 0.15]))
+        seed = draw(st.integers(0, 10_000))
+        pattern = draw(st.sampled_from(["uniform", "powerlaw", "banded"]))
+        return random_sparse(n, n, density, seed=seed, pattern=pattern)
+
+    @settings(max_examples=25, deadline=None)
+    @given(regime_matrix(), regime_matrix())
+    def test_prop_auto_equals_oracle(A, B):
+        if A.n_cols != B.n_rows:
+            B = random_sparse(A.n_cols, B.n_cols, 0.05, seed=0)
+        cache = dp.AutotuneCache("/dev/null/unwritable.json")  # no disk IO
+        want = _dense(sg.spgemm_scl_array(A, B))
+        got = _dense(dp.spgemm(A, B, engine="auto", cache=cache))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 5), st.integers(0, 10_000))
+    def test_prop_batched_esc_equals_per_matrix(k, seed):
+        rng = np.random.default_rng(seed)
+        mats = [random_sparse(24, 24, float(rng.uniform(0.01, 0.1)),
+                              seed=seed + i) for i in range(k)]
+        out = dp.spgemm_batched(batch_csr(mats), batch_csr(mats),
+                                engine="esc")
+        for i, m in enumerate(mats):
+            np.testing.assert_allclose(_dense(out[i]),
+                                       _dense(sg.spgemm_scl_array(m, m)),
+                                       rtol=1e-3, atol=1e-3)

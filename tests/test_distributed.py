@@ -6,6 +6,10 @@ import sys
 
 import pytest
 
+# every test spawns an 8-device subprocess with its own jax init (~10 s
+# each) — slow lane only
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

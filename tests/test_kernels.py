@@ -29,7 +29,10 @@ def _sorted_chunks(S, R, key_hi, vdtype):
     return keys, vals, lens
 
 
-@pytest.mark.parametrize("R", [8, 16, 32, 64, 128, 256])
+# R >= 128 in interpret mode costs ~3 s per case — slow lane only
+@pytest.mark.parametrize("R", [8, 16, 32, 64,
+                               pytest.param(128, marks=pytest.mark.slow),
+                               pytest.param(256, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("S", [1, 3, 16])
 @pytest.mark.parametrize("vdtype", [np.float32, "bfloat16"])
 def test_stream_sort_matches_ref(R, S, vdtype):
@@ -47,7 +50,8 @@ def test_stream_sort_matches_ref(R, S, vdtype):
     np.testing.assert_array_equal(np.asarray(plen), np.asarray(rl))
 
 
-@pytest.mark.parametrize("R", [8, 16, 64, 128])
+@pytest.mark.parametrize("R", [8, 16, 64,
+                               pytest.param(128, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("S", [1, 5, 16])
 def test_stream_merge_matches_ref(R, S):
     ka, va, la = _sorted_chunks(S, R, 4 * R, np.float32)

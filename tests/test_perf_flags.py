@@ -22,6 +22,7 @@ def _setup(arch, **over):
     return cfg, p, toks
 
 
+@pytest.mark.slow  # four loss/grad compiles of the full model (~13 s)
 def test_ce_chunk_matches_full():
     cfg0, p, toks = _setup("tinyllama_1_1b")
     cfg1 = dataclasses.replace(cfg0, ce_chunk=4)
@@ -37,6 +38,7 @@ def test_ce_chunk_matches_full():
     assert err < 5e-2, err
 
 
+@pytest.mark.slow  # prefill+decode compiles for two full archs (~25 s)
 @pytest.mark.parametrize("arch", ["granite_3_2b", "deepseek_v2_236b"])
 def test_decode_dus_matches_onehot(arch):
     cfg0, p, toks = _setup(arch)

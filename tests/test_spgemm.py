@@ -1,11 +1,21 @@
-"""SpGEMM engine: all five implementations agree; hypothesis properties."""
+"""SpGEMM engine: all five implementations agree; hypothesis properties.
+
+The hypothesis property tests are skipped (not collection-errored) when
+hypothesis is not installed, so a bare checkout still runs the
+deterministic tests; CI installs the pinned dev deps and runs everything.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import spgemm as sg
-from repro.core.formats import (CSR, EMPTY, csr_from_coo, csr_from_dense,
+from repro.core.formats import (EMPTY, csr_from_coo, csr_from_dense,
                                 csr_to_numpy, random_sparse)
 from repro.kernels import ref
 
@@ -60,75 +70,74 @@ def test_work_stats_match_bruteforce():
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property tests
+# hypothesis property tests (defined only when hypothesis is installed)
 # ---------------------------------------------------------------------------
 
-@st.composite
-def sparse_pair(draw):
-    n = draw(st.integers(8, 40))
-    density = draw(st.floats(0.01, 0.15))
-    seed = draw(st.integers(0, 10_000))
-    pattern = draw(st.sampled_from(["uniform", "powerlaw", "banded"]))
-    return random_sparse(n, n, density, seed=seed, pattern=pattern)
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def sparse_pair(draw):
+        n = draw(st.integers(8, 40))
+        density = draw(st.floats(0.01, 0.15))
+        seed = draw(st.integers(0, 10_000))
+        pattern = draw(st.sampled_from(["uniform", "powerlaw", "banded"]))
+        return random_sparse(n, n, density, seed=seed, pattern=pattern)
 
+    @settings(max_examples=20, deadline=None)
+    @given(sparse_pair())
+    def test_prop_esc_equals_oracle(A):
+        want = _dense(sg.spgemm_scl_array(A, A))
+        got = _dense(sg.spgemm_esc(A, A))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
-@settings(max_examples=20, deadline=None)
-@given(sparse_pair())
-def test_prop_esc_equals_oracle(A):
-    want = _dense(sg.spgemm_scl_array(A, A))
-    got = _dense(sg.spgemm_esc(A, A))
-    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    @settings(max_examples=10, deadline=None)
+    @given(sparse_pair())
+    def test_prop_spz_equals_oracle(A):
+        want = _dense(sg.spgemm_scl_array(A, A))
+        got = _dense(sg.spgemm_spz(A, A, R=16, impl="xla")[0])
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 12), st.integers(0, 10_000))
+    def test_prop_stream_sort_invariants(S, seed):
+        """Sorted-unique output, conserved mass, correct lengths."""
+        rng = np.random.default_rng(seed)
+        R = 32
+        lens = rng.integers(0, R + 1, S).astype(np.int32)
+        keys = rng.integers(0, 12, (S, R)).astype(np.int32)
+        vals = rng.standard_normal((S, R)).astype(np.float32)
+        k, v, ln = ref.stream_sort_ref(jnp.asarray(keys), jnp.asarray(vals),
+                                       jnp.asarray(lens))
+        k, v, ln = np.asarray(k), np.asarray(v), np.asarray(ln)
+        for s in range(S):
+            kk = k[s, :ln[s]]
+            assert (np.diff(kk) > 0).all()                  # strict ascending
+            assert (k[s, ln[s]:] == EMPTY).all()            # packed
+            np.testing.assert_allclose(v[s, :ln[s]].sum(),
+                                       vals[s, :lens[s]].sum(), rtol=1e-4,
+                                       atol=1e-4)           # mass conserved
+            assert set(kk) == set(keys[s, :lens[s]])        # keys preserved
 
-@settings(max_examples=10, deadline=None)
-@given(sparse_pair())
-def test_prop_spz_equals_oracle(A):
-    want = _dense(sg.spgemm_scl_array(A, A))
-    got = _dense(sg.spgemm_spz(A, A, R=16, impl="xla")[0])
-    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 12), st.integers(0, 10_000))
-def test_prop_stream_sort_invariants(S, seed):
-    """Sorted-unique output, conserved mass, correct lengths."""
-    rng = np.random.default_rng(seed)
-    R = 32
-    lens = rng.integers(0, R + 1, S).astype(np.int32)
-    keys = rng.integers(0, 12, (S, R)).astype(np.int32)
-    vals = rng.standard_normal((S, R)).astype(np.float32)
-    k, v, l = ref.stream_sort_ref(jnp.asarray(keys), jnp.asarray(vals),
-                                  jnp.asarray(lens))
-    k, v, l = np.asarray(k), np.asarray(v), np.asarray(l)
-    for s in range(S):
-        kk = k[s, :l[s]]
-        assert (np.diff(kk) > 0).all()                      # strict ascending
-        assert (k[s, l[s]:] == EMPTY).all()                 # packed
-        np.testing.assert_allclose(v[s, :l[s]].sum(),
-                                   vals[s, :lens[s]].sum(), rtol=1e-4,
-                                   atol=1e-4)               # mass conserved
-        assert set(kk) == set(keys[s, :lens[s]])            # key set preserved
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000))
-def test_prop_merge_then_remerge_idempotent(seed):
-    """Merging a sorted stream with an empty one emits nothing and consumes
-    nothing; merging with itself accumulates values exactly 2x."""
-    rng = np.random.default_rng(seed)
-    R = 16
-    n = rng.integers(1, R + 1)
-    keys = np.full((1, R), EMPTY, np.int32)
-    vals = np.zeros((1, R), np.float32)
-    keys[0, :n] = np.sort(rng.choice(100, n, replace=False))
-    vals[0, :n] = rng.standard_normal(n)
-    lens = np.array([n], np.int32)
-    a = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lens))
-    klo, vlo, khi, vhi, ca, cb, ol = ref.stream_merge_ref(*a, *a)
-    assert int(ol[0]) == n and int(ca[0]) == n and int(cb[0]) == n
-    merged_v = np.concatenate([np.asarray(vlo)[0], np.asarray(vhi)[0]])[:n]
-    np.testing.assert_allclose(merged_v, 2 * vals[0, :n], rtol=1e-5,
-                               atol=1e-5)
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_prop_merge_then_remerge_idempotent(seed):
+        """Merging a sorted stream with an empty one emits nothing and
+        consumes nothing; merging with itself accumulates values exactly
+        2x."""
+        rng = np.random.default_rng(seed)
+        R = 16
+        n = rng.integers(1, R + 1)
+        keys = np.full((1, R), EMPTY, np.int32)
+        vals = np.zeros((1, R), np.float32)
+        keys[0, :n] = np.sort(rng.choice(100, n, replace=False))
+        vals[0, :n] = rng.standard_normal(n)
+        lens = np.array([n], np.int32)
+        a = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lens))
+        klo, vlo, khi, vhi, ca, cb, ol = ref.stream_merge_ref(*a, *a)
+        assert int(ol[0]) == n and int(ca[0]) == n and int(cb[0]) == n
+        merged_v = np.concatenate([np.asarray(vlo)[0],
+                                   np.asarray(vhi)[0]])[:n]
+        np.testing.assert_allclose(merged_v, 2 * vals[0, :n], rtol=1e-5,
+                                   atol=1e-5)
 
 
 def test_formats_roundtrip():

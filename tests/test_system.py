@@ -4,7 +4,6 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,6 +11,10 @@ from repro.configs import base as cb
 from repro.launch.train import train
 from repro.optim import adamw
 from repro.runtime.fault import FaultConfig, Preempted
+
+# real multi-step training runs + serving loops: seconds to tens of seconds
+# each — CI runs these in the non-blocking slow lane, not the tier-1 gate
+pytestmark = pytest.mark.slow
 
 
 def _run(arch, tmp_path, steps=12, preempt_hook=None, ckpt_every=4):
