@@ -1,0 +1,113 @@
+"""Compare freshly generated BENCH_<section>.json files against baselines.
+
+The CI bench-smoke lane regenerates the benchmark JSON and runs this
+script against the committed baselines; a row whose ``us_per_call`` grew
+by more than ``--threshold``x (and is above the ``--min-us`` noise floor)
+is a regression.  Rows are matched by name and only rows present on both
+sides are compared — the committed baselines may carry extra full-mode
+rows (e.g. the table3 spz driver comparison) that the ``--fast`` CI run
+skips.
+
+Default mode prints warnings and exits 0 (non-blocking); ``--strict``
+exits 1 on any regression.  The CI lane starts non-blocking and is meant
+to be flipped to ``--strict`` after one green run on the committed
+baselines.
+
+Usage:
+    python -m benchmarks.compare_baselines --baseline <dir> --current <dir> \
+        [--threshold 2.0] [--min-us 50] [--strict] [section ...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_sections(path: str, sections: list[str] | None) -> dict[str, dict]:
+    """Map section name -> {row name -> us_per_call} from BENCH_*.json."""
+    out: dict[str, dict] = {}
+    for fn in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        try:
+            with open(fn) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"warning: skipping unreadable {fn}: {e}")
+            continue
+        section = data.get("section") or \
+            os.path.basename(fn)[len("BENCH_"):-len(".json")]
+        if sections and section not in sections:
+            continue
+        out[section] = {r["name"]: float(r["us_per_call"])
+                        for r in data.get("rows", [])
+                        if "name" in r and "us_per_call" in r}
+    return out
+
+
+def compare(base: dict[str, dict], cur: dict[str, dict], *,
+            threshold: float, min_us: float) -> list[tuple]:
+    """Return [(section, row, base_us, cur_us, ratio)] regressions."""
+    regressions = []
+    for section in sorted(set(base) & set(cur)):
+        rows = set(base[section]) & set(cur[section])
+        for name in sorted(rows):
+            b, c = base[section][name], cur[section][name]
+            # timings below the noise floor flap wildly in CI; rows whose
+            # us_per_call is a placeholder (0.0 derived-only rows) too
+            if b < min_us and c < min_us:
+                continue
+            if b <= 0.0:
+                continue
+            ratio = c / b
+            if ratio > threshold:
+                regressions.append((section, name, b, c, ratio))
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sections", nargs="*", default=None,
+                    help="restrict to these sections (default: all found)")
+    ap.add_argument("--baseline", required=True,
+                    help="directory with the committed BENCH_*.json")
+    ap.add_argument("--current", default=".",
+                    help="directory with the freshly generated BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when us_per_call grows by more than this "
+                         "factor (default 2.0)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore rows below this many microseconds on both "
+                         "sides (noise floor, default 50)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regressions (default: warn only)")
+    args = ap.parse_args()
+    base = load_sections(args.baseline, args.sections or None)
+    cur = load_sections(args.current, args.sections or None)
+    if not base:
+        print(f"warning: no baseline BENCH_*.json under {args.baseline}; "
+              "nothing to compare")
+        return 0
+    shared = set(base) & set(cur)
+    compared = sum(len(set(base[s]) & set(cur[s])) for s in shared)
+    regressions = compare(base, cur, threshold=args.threshold,
+                          min_us=args.min_us)
+    print(f"compared {compared} rows across {len(shared)} sections "
+          f"(threshold {args.threshold:.1f}x, noise floor "
+          f"{args.min_us:.0f}us)")
+    for section, name, b, c, ratio in regressions:
+        print(f"REGRESSION {section}: {name} {b:.1f}us -> {c:.1f}us "
+              f"({ratio:.2f}x)")
+    if not regressions:
+        print("no regressions")
+        return 0
+    if args.strict:
+        return 1
+    print(f"{len(regressions)} regression(s) — warn-only mode "
+          "(pass --strict to fail)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

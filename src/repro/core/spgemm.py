@@ -9,7 +9,11 @@ Five implementations, mirroring the paper's evaluation:
                radix sort's role)
   spz        — merge-based SpGEMM on the SparseZipper primitives: chunked
                stream sort + zip-merge tree with data-dependent advancement,
-               lock-step groups of S streams
+               lock-step groups of S streams.  Two drivers: the default
+               device-resident "fused" pipeline (expand + sort + full merge
+               tree under one jit, chunk pointers as jax.lax.while_loop
+               state) and the original "host" lock-step Python driver (one
+               kernel issue per chunk — the stats-faithful Fig. 9-11 path)
   spz-rsort  — spz with row indices pre-sorted by per-row work to reduce
                lock-step imbalance (paper §V-B / Fig. 9)
 
@@ -21,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 import jax
@@ -28,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import CSR, EMPTY, csr_from_coo, csr_to_numpy, row_ids_from_indptr
 from repro.core import stream as kvstream
+from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
@@ -353,43 +359,193 @@ def _merge_tree(parts, R, impl, stats: SpzStats, cap_s=None):
     return parts[0] if parts else None
 
 
-def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
-               rsort: bool = False, impl: str = "auto"):
-    """Merge-based SpGEMM using the SparseZipper primitives.
+# ---------------------------------------------------------------------------
+# device-resident (fused) spz pipeline
+# ---------------------------------------------------------------------------
 
-    R: chunk width (paper: 16; TPU-native: 128).
-    S: lock-step stream count per kernel issue (>= R groups batched into one
-       dispatch is allowed — stream semantics are independent — and models a
-       multi-issue matrix unit; default 32*R).
-    rsort: pre-sort row indices by per-row work (spz-rsort).
-    Returns (CSR, SpzStats)."""
-    import time as _time
-    S = S or 32 * R
-    stats = SpzStats()
-    t0 = _time.perf_counter()
+def _fused_expand(row_ids, lane_ids, a_indptr, a_idx, a_val,
+                  b_indptr, b_idx, b_val, L: int):
+    """Device-side expansion: per-stream padded partial products.
+
+    row_ids/lane_ids: (S,) int32 — stream s expands output row
+    ``row_ids[s]`` of batch lane ``lane_ids[s]`` (row_ids < 0 marks
+    padding streams).  Matrix arrays are (batch, ...) stacked.  Returns
+    (keys (S, L), vals (S, L), plens (S,)) with EMPTY/0 padding — the
+    device replacement for the host ``_expand_group`` + chunk-buffer
+    marshaling.
+    """
+    Bn, n_rows1 = a_indptr.shape
+    nnz_cap = a_idx.shape[1]
+    bcap = b_idx.shape[1]
+    valid_s = row_ids >= 0
+    lane = jnp.clip(lane_ids.astype(jnp.int32), 0, Bn - 1)
+    row = jnp.clip(row_ids.astype(jnp.int32), 0, n_rows1 - 2)
+    # per-lane work geometry: w[t] = |B row a_idx[t]| for valid entries
+    blen = (b_indptr[:, 1:] - b_indptr[:, :-1]).astype(jnp.int32)
+    nnz = a_indptr[:, -1]
+    t_ok = jnp.arange(nnz_cap, dtype=jnp.int32)[None, :] < nnz[:, None]
+    j_all = jnp.where(t_ok, a_idx, 0)
+    w = jnp.where(t_ok, jnp.take_along_axis(blen, j_all, axis=1), 0)
+    wcum0 = jnp.concatenate(
+        [jnp.zeros((Bn, 1), jnp.int32), jnp.cumsum(w, axis=1)], axis=1)
+    # flatten lanes onto one monotone axis so one searchsorted serves the
+    # whole batch: lane l lives at offset l * (max total work + 1)
+    M = jnp.max(wcum0[:, -1]) + 1
+    offs = jnp.arange(Bn, dtype=jnp.int32) * M
+    wflat = (wcum0 + offs[:, None]).reshape(-1)
+    t0 = a_indptr[lane, row]
+    t1 = a_indptr[lane, row + 1]
+    ws = wcum0[lane, t0]
+    we = jnp.where(valid_s, wcum0[lane, t1], ws)
+    plens = (we - ws).astype(jnp.int32)
+    p = jnp.arange(L, dtype=jnp.int32)
+    pvalid = p[None, :] < plens[:, None]
+    g = jnp.where(pvalid, ws[:, None] + p[None, :], ws[:, None])
+    q = (g + offs[lane][:, None]).reshape(-1)
+    # product g belongs to the last A-entry whose cumulated work <= g
+    tg = jnp.searchsorted(wflat, q, side="right").reshape(g.shape) - 1
+    t = jnp.clip(tg - (lane * (nnz_cap + 1))[:, None], 0, nnz_cap - 1)
+    base = wflat[tg] - offs[lane][:, None]
+    j = a_idx[lane[:, None], t]
+    pos = jnp.clip(b_indptr[lane[:, None], j] + (g - base), 0, bcap - 1)
+    keys = jnp.where(pvalid, b_idx[lane[:, None], pos], EMPTY)
+    vals = jnp.where(pvalid,
+                     a_val[lane[:, None], t] * b_val[lane[:, None], pos], 0.0)
+    return keys, vals.astype(jnp.float32), plens
+
+
+def _fused_bucket_impl(row_ids, lane_ids, a_indptr, a_idx, a_val,
+                       b_indptr, b_idx, b_val, R: int, L: int, impl: str):
+    """One work bucket of a lock-step group, fully device-resident:
+    expansion, chunk sort, and the whole zip-merge tree chained under a
+    single trace.  Returns (keys (N, L), vals, lens (N,), rounds) where
+    rounds carries the per-(round, pair) merge counters (see
+    kernels/merge_tree.py zip_merge_tree detailed mode)."""
+    keys, vals, plens = _fused_expand(row_ids, lane_ids, a_indptr, a_idx,
+                                      a_val, b_indptr, b_idx, b_val, L)
+    return kvstream.fused_sort_merge(keys, vals, plens, R=R,
+                                     sort_fn=ops._sort_chunk_fn(impl),
+                                     detailed=True)
+
+
+# one compiled pipeline per static (N, L, R) bucket + matrix capacity
+_fused_bucket = functools.partial(
+    jax.jit, static_argnames=("R", "L", "impl"))(_fused_bucket_impl)
+
+
+def _pow2_chunks(max_plen: int, R: int) -> int:
+    """Partition count for the merge tree: next pow2 >= ceil(max_plen/R)."""
+    q = -(-int(max_plen) // R)
+    return 1 << max(0, q - 1).bit_length()
+
+
+def _fused_process_group(items, plens, mats, R, impl, stats: SpzStats,
+                         out_k: dict | None = None,
+                         out_v: dict | None = None,
+                         coo: list | None = None) -> None:
+    """Run one lock-step group of work items through the fused pipeline.
+
+    items: [(lane, row)] output rows of the group; plens: per-item
+    product counts; mats: six (batch, ...) stacked CSR arrays; results
+    land in out_k/out_v keyed by (lane, row), or — when ``coo`` is given
+    instead — as vectorized (rows, cols, vals) triples appended to it
+    (the single-matrix fast path: no per-row slicing).
+
+    Streams are bucketed by their own pow2 chunk count so a skewed group
+    does not pad every stream to the group-max width (the fused analogue
+    of the lock-step imbalance rsort targets).  The payload per stream is
+    independent of which streams share a kernel, so bucketing cannot
+    change results; the lock-step *instruction counts* are group-wide, so
+    they are rebuilt exactly from the per-(round, pair) bucket counters —
+    a pair's issue count is the max per-stream step count (elementwise
+    max over buckets), zip_elems a plain sum.  Sort-phase counters depend
+    only on plens and are computed here directly.  chunk_stores is
+    approximate for this driver: the host tree passes odd partitions
+    through for free, while the pow2 tree copies them through an empty
+    merge."""
+    empty_k = np.empty(0, np.int32)
+    empty_v = np.empty(0, np.float32)
+    buckets: dict[int, list[int]] = {}
+    for ix, (it, pl) in enumerate(zip(items, plens)):
+        if pl == 0:
+            if coo is None:
+                out_k[it] = empty_k
+                out_v[it] = empty_v
+        else:
+            buckets.setdefault(_pow2_chunks(int(pl), R), []).append(ix)
+    if not buckets:
+        return
+    max_plen = int(plens.max())
+    n_used = -(-max_plen // R)
+    stats.n_mssort += n_used
+    stats.sort_elems += int(plens.sum())
+    stats.chunk_loads += n_used
+    stats.chunk_stores += n_used
+    n_rounds = max(buckets).bit_length() - 1
+    steps_acc = [np.zeros(max(buckets) >> (k + 1), np.int64)
+                 for k in range(n_rounds)]
+    tails_acc = [np.zeros((max(buckets) >> (k + 1), 2), np.int64)
+                 for k in range(n_rounds)]
+    zip_elems = 0
+    for C_b in sorted(buckets):
+        idxs = buckets[C_b]
+        Nb = 1 << max(0, len(idxs) - 1).bit_length()
+        row_ids = np.full(Nb, -1, np.int32)
+        lane_ids = np.zeros(Nb, np.int32)
+        for t, ix in enumerate(idxs):
+            lane_ids[t], row_ids[t] = items[ix]
+        mk, mv, ml, rounds = _fused_bucket(
+            jnp.asarray(row_ids), jnp.asarray(lane_ids), *mats,
+            R=R, L=C_b * R, impl=impl)
+        mk, mv, ml = np.asarray(mk), np.asarray(mv), np.asarray(ml)
+        for k, (st, ze, tl) in enumerate(rounds):
+            st, tl = np.asarray(st), np.asarray(tl)
+            np.maximum(steps_acc[k][:len(st)], st,
+                       out=steps_acc[k][:len(st)])
+            np.maximum(tails_acc[k][:len(tl)], tl,
+                       out=tails_acc[k][:len(tl)])
+            zip_elems += int(np.asarray(ze))
+        if coo is not None:
+            valid = np.arange(mk.shape[1])[None, :] < ml[:, None]
+            coo.append((np.repeat(row_ids, ml), mk[valid], mv[valid]))
+        else:
+            for t, ix in enumerate(idxs):
+                it = items[ix]
+                out_k[it] = mk[t, :ml[t]]
+                out_v[it] = mv[t, :ml[t]]
+    n_zip = sum(int(s.sum()) for s in steps_acc)
+    stats.n_mszip += n_zip
+    stats.zip_elems += zip_elems
+    stats.chunk_loads += 2 * n_zip
+    stats.chunk_stores += n_zip + sum(int(t.sum()) for t in tails_acc)
+
+
+def _group_cap(Sg: int, S: int) -> int:
+    """Pad kernel issues to the next pow2 >= Sg (capped at S): bounds the
+    number of distinct compiled shapes without inflating a small matrix's
+    groups all the way to S streams."""
+    return min(S, 1 << max(0, Sg - 1).bit_length())
+
+
+def _spz_host_driver(A, B, R, S, order, impl, stats):
+    """The paper-faithful lock-step Python driver: one kernel issue per
+    chunk, numpy marshaling between issues (stats carry the per-phase
+    wall-clock breakdown used by the Fig. 9 benchmark)."""
     a_indptr, a_idx, a_val = csr_to_numpy(A)
     b_indptr, b_idx, b_val = csr_to_numpy(B)
-    order = np.arange(A.n_rows)
-    if rsort:
-        order = np.argsort(row_work(A, B), kind="stable")
-    stats.t_preprocess = _time.perf_counter() - t0
     out_rows_k = [None] * A.n_rows
     out_rows_v = [None] * A.n_rows
     for g0 in range(0, A.n_rows, S):
         rows = order[g0:g0 + S]
-        Sg = len(rows)
-        # pad chunk-kernel issues to the next pow2 >= Sg (capped at S):
-        # bounds the number of distinct compiled shapes without inflating
-        # a small matrix's groups all the way to S streams
-        cap_g = min(S, 1 << max(0, Sg - 1).bit_length())
-        t1 = _time.perf_counter()
+        cap_g = _group_cap(len(rows), S)
+        t1 = time.perf_counter()
         products = _expand_group(rows, a_indptr, a_idx, a_val,
                                  b_indptr, b_idx, b_val)
-        t2 = _time.perf_counter()
+        t2 = time.perf_counter()
         stats.t_expand += t2 - t1
-        parts = _sort_phase(products, R, Sg, impl, stats, cap_s=cap_g)
+        parts = _sort_phase(products, R, len(rows), impl, stats, cap_s=cap_g)
         final = _merge_tree(parts, R, impl, stats, cap_s=cap_g)
-        stats.t_sort += _time.perf_counter() - t2
+        stats.t_sort += time.perf_counter() - t2
         if final is not None:
             Kf, Vf, lf = final
             for s, i in enumerate(rows):
@@ -399,17 +555,94 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
             for i in rows:
                 out_rows_k[i] = np.empty(0, np.int32)
                 out_rows_v[i] = np.empty(0, np.float32)
-    t3 = _time.perf_counter()
+    return out_rows_k, out_rows_v
+
+
+def _spz_fused_driver(A, B, R, S, order, work, impl, stats):
+    """Device-resident driver: per lock-step group, the work-bucketed
+    expand/sort/merge-tree pipelines run as jitted computations keyed on
+    static (N, L, R) buckets.  All chunk pointers live on the device;
+    SpzStats counts come back as device counters (wall-clock attribution
+    collapses into t_sort)."""
+    coo: list = []
+    mats = (A.indptr[None], A.indices[None], A.data[None],
+            B.indptr[None], B.indices[None], B.data[None])
+    for g0 in range(0, A.n_rows, S):
+        rows = order[g0:g0 + S]
+        items = [(0, int(i)) for i in rows]
+        t1 = time.perf_counter()
+        _fused_process_group(items, work[rows], mats, R, impl, stats,
+                             coo=coo)
+        stats.t_sort += time.perf_counter() - t1
+    return coo
+
+
+def _coo_parts_to_csr(coo, shape) -> CSR:
+    """Assemble the fused driver's vectorized (rows, cols, vals) parts
+    into the output CSR, dropping exact zeros like the scalar engines."""
+    if not coo:
+        return csr_from_coo([], [], [], shape)
+    rows = np.concatenate([p[0] for p in coo])
+    cols = np.concatenate([p[1] for p in coo])
+    vals = np.concatenate([p[2] for p in coo])
+    nz = vals != 0.0
+    return csr_from_coo(rows[nz], cols[nz], vals[nz], shape)
+
+
+def _rows_to_csr(out_rows_k, out_rows_v, shape) -> CSR:
+    """Assemble per-row key/value slices into the output CSR (empty-safe)."""
     rr, cc, vv = [], [], []
-    for i in range(A.n_rows):
-        k, v = out_rows_k[i], out_rows_v[i]
+    for i, (k, v) in enumerate(zip(out_rows_k, out_rows_v)):
         nz = v != 0.0
         rr.append(np.full(int(nz.sum()), i, np.int64))
         cc.append(k[nz])
         vv.append(v[nz])
-    out = csr_from_coo(np.concatenate(rr), np.concatenate(cc),
-                       np.concatenate(vv), (A.n_rows, B.n_cols))
-    stats.t_output = _time.perf_counter() - t3
+    if not rr:
+        return csr_from_coo([], [], [], shape)
+    return csr_from_coo(np.concatenate(rr), np.concatenate(cc),
+                        np.concatenate(vv), shape)
+
+
+def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
+               rsort: bool = False, impl: str = "auto",
+               driver: str = "fused"):
+    """Merge-based SpGEMM using the SparseZipper primitives.
+
+    R: chunk width (paper: 16; TPU-native: 128).
+    S: lock-step stream count per kernel issue (>= R groups batched into one
+       dispatch is allowed — stream semantics are independent — and models a
+       multi-issue matrix unit; default 32*R).
+    rsort: pre-sort row indices by per-row work (spz-rsort).
+    driver: "fused" (default) — device-resident pipeline: expansion, chunk
+       sort, and the whole zip-merge tree run as ONE jitted computation
+       per (S, L, R) bucket, with the data-dependent chunk advancement
+       under ``jax.lax.while_loop``; "host" — the original lock-step
+       Python driver (one kernel issue per chunk), kept for the
+       stats-faithful Fig. 9-11 wall-clock breakdown.  Both produce
+       identical outputs and identical mssort/mszip instruction counts.
+    Returns (CSR, SpzStats)."""
+    S = S or 32 * R
+    stats = SpzStats()
+    if driver not in ("fused", "host"):
+        raise ValueError(f"unknown spz driver {driver!r}; use 'fused'|'host'")
+    if A.n_rows == 0:
+        # zero output rows: concatenating per-row results would raise
+        return csr_from_coo([], [], [], (A.n_rows, B.n_cols)), stats
+    t0 = time.perf_counter()
+    work = row_work(A, B) if (rsort or driver == "fused") else None
+    order = (np.argsort(work, kind="stable") if rsort
+             else np.arange(A.n_rows))
+    stats.t_preprocess = time.perf_counter() - t0
+    if driver == "host":
+        out_rows_k, out_rows_v = _spz_host_driver(A, B, R, S, order, impl,
+                                                  stats)
+        t3 = time.perf_counter()
+        out = _rows_to_csr(out_rows_k, out_rows_v, (A.n_rows, B.n_cols))
+    else:
+        coo = _spz_fused_driver(A, B, R, S, order, work, impl, stats)
+        t3 = time.perf_counter()
+        out = _coo_parts_to_csr(coo, (A.n_rows, B.n_cols))
+    stats.t_output = time.perf_counter() - t3
     return out, stats
 
 
@@ -426,6 +659,10 @@ def spgemm(A: CSR, B: CSR, method: str = "spz", **kw):
         return spgemm_esc(A, B, **kw)
     if method == "spz":
         return spgemm_spz(A, B, **kw)[0]
+    if method == "spz-fused":
+        return spgemm_spz(A, B, driver="fused", **kw)[0]
+    if method == "spz-host":
+        return spgemm_spz(A, B, driver="host", **kw)[0]
     if method == "spz-rsort":
         return spgemm_spz(A, B, rsort=True, **kw)[0]
     raise ValueError(f"unknown method {method}")

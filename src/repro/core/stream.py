@@ -7,6 +7,19 @@ matrix-register row). This module provides the chunk-level API (thin
 wrappers over kernels/ops.py) plus host-side helpers to marshal ragged
 numpy streams into (S, R) chunk fronts and back — the role the indexed
 matrix load/store instructions (mlxe.t / msxe.t) play in the paper.
+
+Two tiers coexist:
+
+  * the **host tier** (``sort_chunks``/``merge_chunks`` + the numpy
+    gather/scatter helpers) drives one kernel issue at a time from Python
+    — stats-faithful to the paper's per-instruction accounting, but every
+    chunk pays a dispatch;
+  * the **device tier** (``merge_partitions``/``fused_sort_merge``) keeps
+    the stream state — read/write pointers and the whole lock-step merge
+    tree — resident on the device: one jitted computation per (S, L, R)
+    bucket, with the data-dependent advancement under
+    ``jax.lax.while_loop``.  Instruction counters come back as device
+    scalars so ``SpzStats`` stays exact.
 """
 from __future__ import annotations
 
@@ -14,7 +27,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.formats import EMPTY
-from repro.kernels import ops
+from repro.kernels import merge_tree, ops, ref
 
 
 def sort_chunks(keys, vals, lens, *, impl="auto", cap_s=None):
@@ -28,6 +41,76 @@ def merge_chunks(ka, va, la, kb, vb, lb, *, impl="auto", cap_s=None):
     return ops.stream_merge(jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
                             jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
                             impl=impl, cap_s=cap_s)
+
+
+def merge_partitions(ka, va, la, kb, vb, lb, *, R=16, pair_streams=None,
+                     with_counters=True):
+    """Device-resident full merge of two padded (N, L) partitions: the
+    lock-step chunk advancement (pointers, copy-through tails) runs under
+    one ``jax.lax.while_loop`` instead of a host loop of mszip issues.
+    Returns (keys, vals, lens, MergeCounters)."""
+    return ops.merge_partitions(jnp.asarray(ka), jnp.asarray(va),
+                                jnp.asarray(la), jnp.asarray(kb),
+                                jnp.asarray(vb), jnp.asarray(lb),
+                                R=R, pair_streams=pair_streams,
+                                with_counters=with_counters)
+
+
+def chunk_sort_partitions(keys, vals, plens, *, R, sort_fn=ref.stream_sort_ref):
+    """Chunk-sort (S, L) padded streams into (S, C, R) sorted partitions.
+
+    Traceable device replacement for the host ``_sort_phase``: all S*C
+    R-chunks are sorted in ONE kernel issue, but the returned counters
+    keep the host accounting (one mssort per chunk column that holds any
+    data — ceil(max plens / R) issues, each a load + store).
+
+    Returns (keys (S, C, R), vals, lens (S, C), n_mssort, sort_elems).
+    """
+    S, L = keys.shape
+    C = L // R
+    assert C * R == L, f"partition width {L} must be a multiple of R={R}"
+    plens = plens.astype(jnp.int32)
+    chunk_lens = jnp.clip(plens[:, None]
+                          - jnp.arange(C, dtype=jnp.int32)[None, :] * R,
+                          0, R).reshape(S * C)
+    sk, sv, sl = sort_fn(keys.reshape(S * C, R), vals.reshape(S * C, R),
+                         chunk_lens)
+    n_mssort = -(-jnp.max(plens) // R)
+    sort_elems = jnp.sum(plens, dtype=jnp.int32)
+    return (sk.reshape(S, C, R), sv.reshape(S, C, R), sl.reshape(S, C),
+            n_mssort.astype(jnp.int32), sort_elems)
+
+
+def fused_sort_merge(keys, vals, plens, *, R,
+                     sort_fn=ref.stream_sort_ref, with_counters=True,
+                     detailed=False):
+    """Device-resident sort + zip-merge tree over padded product streams.
+
+    keys/vals: (S, L) unsorted partial products (EMPTY padded), L = C*R
+    with C a power of two; plens: (S,) valid lengths.  Chunk-sorts every
+    R-chunk, then runs the full merge tree with all pointer state on the
+    device.  Returns (keys (S, L), vals, lens (S,), counters (6,) int32:
+    [n_mssort, sort_elems, n_mszip, zip_elems, chunk_loads, chunk_stores])
+    with the host driver's instruction accounting (zeros when
+    ``with_counters=False`` skips the pointer state machine).
+
+    ``detailed=True`` instead returns the per-(round, pair) merge
+    counters from ``merge_tree.zip_merge_tree`` in place of the 6-vector
+    — the form the bucketed spz driver needs to rebuild lock-step-group
+    counts across split kernel calls (the sort-phase counters are
+    plens-derivable, so they are omitted there).
+    """
+    sk, sv, sl, n_mssort, sort_elems = chunk_sort_partitions(
+        keys, vals, plens, R=R, sort_fn=sort_fn)
+    if detailed:
+        return merge_tree.zip_merge_tree(sk, sv, sl, R=R, detailed=True)
+    mk, mv, ml, zc = merge_tree.zip_merge_tree(sk, sv, sl, R=R,
+                                               with_counters=with_counters)
+    counters = jnp.stack([
+        n_mssort, sort_elems, zc.n_mszip, zc.zip_elems,
+        n_mssort + zc.chunk_loads, n_mssort + zc.chunk_stores,
+    ])
+    return mk, mv, ml, counters
 
 
 def gather_chunk_fronts(parts_k, parts_v, ptrs, R):

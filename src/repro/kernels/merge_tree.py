@@ -1,0 +1,302 @@
+"""Device-resident zip-merge tree: the lock-step merge loop as a jitted scan.
+
+The host spz driver (``core/spgemm.py``) runs the paper's data-dependent
+chunk advancement as a Python ``while`` loop — one tiny ``stream_merge``
+dispatch per chunk with numpy gather/scatter marshaling in between, which
+is exactly the overhead SparseZipper keeps inside the matrix unit.  This
+module moves that state machine onto the device:
+
+``merge_partitions``
+    Fully merge two padded (N, L) sorted-unique partitions per stream in
+    one jittable computation.  The per-stream read pointers ``pa``/``pb``
+    run the chunk-advancement state machine under ``jax.lax.while_loop``
+    (dynamic-slice chunk fronts, pointers as device state — the
+    stream-register analogue of Sparse Stream Semantic Registers), which
+    yields the SparseZipper instruction counters.  The merged *payload*
+    is computed by a rank-based union merge (gathers + row-wise
+    searchsorted, no data-dependent loop): because two sorted
+    duplicate-free streams always consume equal keys in the same
+    lock-step step — a key can only be mergeable once the other side's
+    front has reached it — the chunk loop's packed output is provably
+    byte-identical to the one-shot union, so values never ride through
+    the sequential loop.
+
+``zip_merge_tree``
+    The full tree over C = 2**k sorted R-chunk partitions: each round
+    stacks all partition pairs onto the stream axis and merges them with
+    one ``merge_partitions`` call, halving the partition count until one
+    (S, C*R) partition survives.  Rounds are unrolled at trace time (C is
+    static), so the tree is one jittable function.
+
+Counter semantics match the host driver's ``SpzStats`` accounting: an
+mszip "issue" is one lock-step step of one partition pair across its S
+streams, counted only while that pair has active streams — identical to
+the host loop's per-iteration counts, because inactive pairs present
+empty fronts and advance nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMPTY
+
+
+class MergeCounters(NamedTuple):
+    """SparseZipper dynamic-instruction counters, as device int32 scalars."""
+
+    n_mszip: jnp.ndarray      # zip-instruction issues
+    zip_elems: jnp.ndarray    # key-value tuples moved through merge
+    chunk_loads: jnp.ndarray  # mlxe.t analogue (chunk fronts built)
+    chunk_stores: jnp.ndarray # msxe.t analogue
+
+
+def _rowwise_searchsorted(a, q, side="left"):
+    """Per-row searchsorted: a (N, W) sorted rows, q (N, Q) queries."""
+    return jax.vmap(functools.partial(jnp.searchsorted, side=side))(a, q)
+
+
+def _union_merge(ka, va, la, kb, vb, lb):
+    """One-shot merge of two sorted duplicate-free padded partitions.
+
+    Equal keys across sides accumulate as ``va + vb`` (the index order the
+    chunk-level mszip kernel uses); all other values pass through
+    untouched, so the result is byte-identical to driving the chunk loop.
+    Gathers and row-wise searchsorted only — no scatters, no sorts.
+
+    Returns (keys (N, La+Lb), vals, lens)."""
+    N, La = ka.shape
+    Lb = kb.shape[1]
+    Lo = La + Lb
+    ar = jnp.arange(La, dtype=jnp.int32)
+    br = jnp.arange(Lb, dtype=jnp.int32)
+    a_ok = ar[None, :] < la[:, None]
+    b_ok = br[None, :] < lb[:, None]
+    # cross-side duplicate detection (valid keys are never EMPTY and the
+    # EMPTY padding sorts after every valid key)
+    jb = _rowwise_searchsorted(kb, ka).astype(jnp.int32)
+    jb_c = jnp.minimum(jb, Lb - 1)
+    amatch = a_ok & (jb < lb[:, None]) & \
+        (jnp.take_along_axis(kb, jb_c, axis=1) == ka)
+    ia = _rowwise_searchsorted(ka, kb).astype(jnp.int32)
+    ia_c = jnp.minimum(ia, La - 1)
+    bmatch = b_ok & (ia < la[:, None]) & \
+        (jnp.take_along_axis(ka, ia_c, axis=1) == kb)
+    # a absorbs its duplicate's value; dropped b keeps the a slot position
+    va2 = jnp.where(amatch, va + jnp.take_along_axis(vb, jb_c, axis=1), va)
+    excl_a = jnp.cumsum(amatch, axis=1, dtype=jnp.int32) - amatch
+    excl_b = jnp.cumsum(bmatch, axis=1, dtype=jnp.int32) - bmatch
+    # output rank: position among the merged uniques
+    pos_a = jnp.where(a_ok, ar[None, :] + jb - excl_a, Lo)
+    pos_b_surv = br[None, :] + ia - excl_b
+    pos_b = jnp.where(b_ok,
+                      jnp.where(bmatch,
+                                jnp.take_along_axis(pos_a, ia_c, axis=1),
+                                pos_b_surv),
+                      Lo)
+    # invert the (strictly increasing over valid slots) rank maps with
+    # searchsorted — a gather-only compaction
+    m = jnp.broadcast_to(jnp.arange(Lo, dtype=jnp.int32)[None, :], (N, Lo))
+    qa = _rowwise_searchsorted(pos_a, m).astype(jnp.int32)
+    qa_c = jnp.minimum(qa, La - 1)
+    is_a = (qa < La) & (jnp.take_along_axis(pos_a, qa_c, axis=1) == m)
+    qb = _rowwise_searchsorted(pos_b, m).astype(jnp.int32)
+    qb_c = jnp.minimum(qb, Lb - 1)
+    is_b = ~is_a & (qb < Lb) & \
+        (jnp.take_along_axis(pos_b, qb_c, axis=1) == m)
+    out_k = jnp.where(is_a, jnp.take_along_axis(ka, qa_c, axis=1),
+                      jnp.where(is_b, jnp.take_along_axis(kb, qb_c, axis=1),
+                                EMPTY))
+    out_v = jnp.where(is_a, jnp.take_along_axis(va2, qa_c, axis=1),
+                      jnp.where(is_b, jnp.take_along_axis(vb, qb_c, axis=1),
+                                0.0))
+    out_len = la + lb - jnp.sum(amatch, axis=1, dtype=jnp.int32)
+    return out_k, out_v, out_len
+
+
+def sort_chunks_linear(keys, vals, lens):
+    """Scatter-free chunk sort, byte-identical to ``ref.stream_sort_ref``.
+
+    Same contract (sort each (N, R) chunk, accumulate duplicate keys,
+    compress uniques to the front) and the same left-to-right value
+    accumulation order, but built for the device-resident pipeline: one
+    stable argsort, an R-step sequential run prefix (adding the
+    predecessor's finished prefix keeps the float association linear,
+    exactly like segment_sum's index-order adds), and a searchsorted
+    compaction — no vmapped segment_sum scatter, no second sort.
+    """
+    N, R = keys.shape
+    r = jnp.arange(R, dtype=jnp.int32)
+    in_ok = r[None, :] < lens[:, None]
+    k0 = jnp.where(in_ok, keys, EMPTY)
+    v0 = jnp.where(in_ok, vals, 0)
+    order = jnp.argsort(k0, axis=-1)  # stable: ties keep product order
+    k = jnp.take_along_axis(k0, order, axis=-1)
+    v = jnp.take_along_axis(v0, order, axis=-1)
+    prev = jnp.concatenate([jnp.full_like(k[:, :1], EMPTY), k[:, :-1]],
+                           axis=-1)
+    start = k != prev
+    start_idx = jax.lax.cummax(jnp.where(start, r[None, :], 0), axis=1)
+    run_pos = r[None, :] - start_idx
+    acc = v
+    for d in range(1, R):
+        shifted = jnp.concatenate([jnp.zeros_like(acc[:, :1]),
+                                   acc[:, :-1]], axis=-1)
+        acc = jnp.where(run_pos == d, shifted + v, acc)
+    nxt = jnp.concatenate([k[:, 1:], jnp.full_like(k[:, :1], EMPTY)],
+                          axis=-1)
+    is_last = (k != nxt) & (k != EMPTY)
+    csum = jnp.cumsum(is_last, axis=-1, dtype=jnp.int32)
+    idx = _rowwise_searchsorted(
+        csum, jnp.broadcast_to(r[None, :] + 1, (N, R))).astype(jnp.int32)
+    idx_c = jnp.minimum(idx, R - 1)
+    out_ok = r[None, :] < csum[:, -1:]
+    out_k = jnp.where(out_ok, jnp.take_along_axis(k, idx_c, axis=-1), EMPTY)
+    out_v = jnp.where(out_ok, jnp.take_along_axis(acc, idx_c, axis=-1), 0)
+    return out_k, out_v, csum[:, -1]
+
+
+def _front_keys(K, lens, ptr, R: int):
+    """(N, R) key chunk front at ``ptr`` (EMPTY past the effective lens)."""
+    L = K.shape[1]
+    n = jnp.clip(lens - ptr, 0, R)
+    idx = jnp.clip(ptr[:, None] + jnp.arange(R, dtype=jnp.int32)[None, :],
+                   0, max(L - 1, 0))
+    ok = jnp.arange(R, dtype=jnp.int32)[None, :] < n[:, None]
+    return jnp.where(ok, jnp.take_along_axis(K, idx, axis=1), EMPTY), n
+
+
+def _advance_counters(ka, la, kb, lb, *, R: int, pair_streams: int):
+    """Run the lock-step chunk-advancement state machine on pointers only.
+
+    This is the data-dependent ``jax.lax.while_loop``: per-stream read
+    pointers pa/pb advance by the mszip consumed counts (all keys <= the
+    merge-bit cutoff) until one side of every stream is exhausted.
+
+    Returns (steps (P,), zip_elems (), tails (P, 2)) — per-pair issue
+    counts, total tuples presented, and per-pair/per-side copy-through
+    tail stores.  Per-pair vectors (rather than pre-summed scalars) let a
+    caller that split one lock-step group across several kernel calls
+    reconstruct the group counters exactly: a pair's issue count is the
+    max per-stream step count, so group steps = elementwise max over the
+    splits, while zip_elems is a plain per-stream sum."""
+    N = ka.shape[0]
+    S = pair_streams
+    P = N // S
+
+    def cond(state):
+        pa, pb, _, _ = state
+        return jnp.any((pa < la) & (pb < lb))
+
+    def body(state):
+        pa, pb, steps, zip_elems = state
+        both = (pa < la) & (pb < lb)
+        fa_k, fa_n = _front_keys(ka, jnp.where(both, la, 0), pa, R)
+        fb_k, fb_n = _front_keys(kb, jnp.where(both, lb, 0), pb, R)
+        # merge-bit cutoff: max valid key per side (-1 when empty)
+        max_a = jnp.max(jnp.where(fa_k != EMPTY, fa_k, -1), axis=1)
+        max_b = jnp.max(jnp.where(fb_k != EMPTY, fb_k, -1), axis=1)
+        cutoff = jnp.minimum(max_a, max_b)
+        ca = jnp.sum((fa_k != EMPTY) & (fa_k <= cutoff[:, None]), axis=1,
+                     dtype=jnp.int32)
+        cb = jnp.sum((fb_k != EMPTY) & (fb_k <= cutoff[:, None]), axis=1,
+                     dtype=jnp.int32)
+        steps = steps + jnp.any(both.reshape(P, S), axis=1).astype(jnp.int32)
+        zip_elems = zip_elems + jnp.sum(fa_n + fb_n, dtype=jnp.int32)
+        return pa + ca, pb + cb, steps, zip_elems
+
+    z = jnp.zeros((N,), jnp.int32)
+    pa, pb, steps, zip_elems = jax.lax.while_loop(
+        cond, body, (z, z, jnp.zeros((P,), jnp.int32),
+                     jnp.zeros((), jnp.int32)))
+    # copy-through tail stores (one msxe.t per R-chunk, lock-step per pair)
+    tails = []
+    for lens, ptr in ((la, pa), (lb, pb)):
+        rem = jnp.maximum(lens - ptr, 0)
+        tails.append(jnp.max(-(-rem.reshape(P, S) // R), axis=1))
+    return steps, zip_elems, jnp.stack(tails, axis=1).astype(jnp.int32)
+
+
+def merge_partitions(ka, va, la, kb, vb, lb, *, R: int,
+                     pair_streams: int | None = None,
+                     with_counters: bool = True):
+    """Fully merge two padded sorted-unique partitions per stream.
+
+    ka/kb: (N, La)/(N, Lb) int32 keys (EMPTY padded); va/vb: values;
+    la/lb: (N,) valid lengths.  R: chunk width of the modelled mszip
+    issue.  ``pair_streams``: lock-step group size S for instruction
+    accounting — rows [p*S, (p+1)*S) form partition pair p, and a zip
+    issue is counted per *pair* per advancement step while that pair is
+    active (the host driver's ``_merge_round`` semantics).  Default: all
+    N rows are one pair.  ``with_counters=False`` skips the pointer state
+    machine and returns zero counters (the payload does not depend on
+    it).
+
+    Returns (keys (N, La+Lb), vals, lens, MergeCounters).  Jittable with
+    static R/pair_streams/with_counters.
+    """
+    N = ka.shape[0]
+    S = pair_streams or N
+    assert N % S == 0, f"pair_streams {S} must divide stream count {N}"
+    la = la.astype(jnp.int32)
+    lb = lb.astype(jnp.int32)
+    ko, vo, lo = _union_merge(ka, va, la, kb, vb, lb)
+    if with_counters:
+        steps, zip_elems, tails = _advance_counters(ka, la, kb, lb, R=R,
+                                                    pair_streams=S)
+        n_zip = jnp.sum(steps, dtype=jnp.int32)
+        cnt = MergeCounters(n_zip, zip_elems, 2 * n_zip,
+                            n_zip + jnp.sum(tails, dtype=jnp.int32))
+    else:
+        z = jnp.zeros((), jnp.int32)
+        cnt = MergeCounters(z, z, z, z)
+    return ko, vo, lo, cnt
+
+
+def zip_merge_tree(keys, vals, lens, *, R: int, with_counters: bool = True,
+                   detailed: bool = False):
+    """Zip-merge tree over C = 2**k sorted R-chunk partitions, on device.
+
+    keys/vals: (S, C, R) sorted-unique partitions (trailing partitions may
+    be empty — they merge as no-ops and cost no zip issues); lens: (S, C).
+    Each round stacks all partition pairs onto the stream axis and merges
+    them in one shot, so the tree is log2(C) jittable rounds.
+
+    Returns (keys (S, C*R), vals, lens (S,), counters) where counters is
+    a MergeCounters of summed scalars, or — with ``detailed=True`` — a
+    tuple with one (steps (P,), zip_elems (), tails (P, 2)) entry per
+    round, letting a caller that split a lock-step group across several
+    calls rebuild the group-exact issue counts (elementwise max over
+    splits for steps/tails, sum for zip_elems).
+    """
+    S, C, _ = keys.shape
+    assert C & (C - 1) == 0, f"partition count {C} must be a power of two"
+    parts = [(keys[:, c], vals[:, c], lens[:, c].astype(jnp.int32))
+             for c in range(C)]
+    rounds = []
+    cnt = MergeCounters(*(jnp.zeros((), jnp.int32) for _ in range(4)))
+    while len(parts) > 1:
+        half = len(parts) // 2
+        ka = jnp.concatenate([parts[2 * j][0] for j in range(half)], axis=0)
+        va = jnp.concatenate([parts[2 * j][1] for j in range(half)], axis=0)
+        la = jnp.concatenate([parts[2 * j][2] for j in range(half)], axis=0)
+        kb = jnp.concatenate([parts[2 * j + 1][0] for j in range(half)], axis=0)
+        vb = jnp.concatenate([parts[2 * j + 1][1] for j in range(half)], axis=0)
+        lb = jnp.concatenate([parts[2 * j + 1][2] for j in range(half)], axis=0)
+        ko, vo, lo = _union_merge(ka, va, la, kb, vb, lb)
+        if with_counters or detailed:
+            steps, zip_elems, tails = _advance_counters(ka, la, kb, lb, R=R,
+                                                        pair_streams=S)
+            rounds.append((steps, zip_elems, tails))
+            n_zip = jnp.sum(steps, dtype=jnp.int32)
+            round_cnt = MergeCounters(n_zip, zip_elems, 2 * n_zip,
+                                      n_zip + jnp.sum(tails,
+                                                      dtype=jnp.int32))
+            cnt = MergeCounters(*(a + b for a, b in zip(cnt, round_cnt)))
+        parts = [(ko[j * S:(j + 1) * S], vo[j * S:(j + 1) * S],
+                  lo[j * S:(j + 1) * S]) for j in range(half)]
+    k, v, ln = parts[0]
+    return k, v, ln, (tuple(rounds) if detailed else cnt)

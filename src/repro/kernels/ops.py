@@ -9,11 +9,13 @@
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.formats import EMPTY
-from repro.kernels import ref
+from repro.kernels import merge_tree, ref
 from repro.kernels.stream_sort import stream_sort_pallas
 from repro.kernels.stream_merge import stream_merge_pallas
 
@@ -80,6 +82,34 @@ def stream_merge(ka, va, la, kb, vb, lb, *, impl: str = "auto",
     else:
         outs = _merge_ref(ka, va, la, kb, vb, lb)
     return tuple(o[:S] for o in outs)
+
+
+def _sort_chunk_fn(impl: str):
+    """The (S, R) chunk-sort kernel a device-resident pipeline should issue.
+
+    The xla path uses the scatter-free ``sort_chunks_linear`` — byte-
+    identical to ``ref.stream_sort_ref`` (same stable order, same linear
+    accumulation) but much cheaper inside a fused computation."""
+    if _resolve(impl) == "pallas":
+        return functools.partial(stream_sort_pallas, interpret=not _on_tpu())
+    return merge_tree.sort_chunks_linear
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("R", "pair_streams", "with_counters"))
+def merge_partitions(ka, va, la, kb, vb, lb, *, R: int = 16,
+                     pair_streams: int | None = None,
+                     with_counters: bool = True):
+    """Device-resident partition merge: the full data-dependent chunk
+    advancement of two padded (N, L) sorted-unique partitions, with the
+    pointer state machine under ``jax.lax.while_loop`` (see
+    kernels/merge_tree.py).
+
+    Returns (keys (N, La+Lb), vals, lens, MergeCounters)."""
+    return merge_tree.merge_partitions(
+        jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
+        jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
+        R=R, pair_streams=pair_streams, with_counters=with_counters)
 
 
 def sort_tokens_by_key(keys, *, impl: str = "auto"):
