@@ -27,7 +27,7 @@ import time
 import numpy as np
 
 from benchmarks import datasets
-from repro.core import spgemm as sg
+from repro.core import spgemm_engines as sg
 
 # rows of the section currently running; flushed to BENCH_<section>.json
 _ROWS: list[dict] = []
@@ -330,9 +330,54 @@ def dispatch_bench(mats, fast=False):
               f"lanes={len(lanes)}|speedup_vs_host={t_z / t_zf:.2f}")
 
 
+def serve_bench(fast=False):
+    """Continuous-serving section: synthetic mixed SpGEMM traffic through
+    the bucketed service (serving/spgemm_service.py) on the sharded
+    plan/execute path.  Reports warmup vs steady-state request rate,
+    latency percentiles, and the autotune-cache plan hit rate — the
+    serving steady state the dispatch caches exist for."""
+    from repro.core import dispatch as dp
+    from repro.launch.serve_spgemm import make_traffic
+    from repro.serving.spgemm_service import SpGemmService
+    print("# serve: bucketed continuous service, warmup vs steady state")
+    n = 96 if fast else 240
+    cache = dp.AutotuneCache(os.path.join(
+        tempfile.mkdtemp(prefix="bench_serve_"), "autotune.json"))
+    dp.clear_feature_cache()
+    service = SpGemmService(max_batch=8, flush_timeout=0.05, engine="auto",
+                            cache=cache)
+    traffic = make_traffic(n, seed=0)
+    warmup = n // 4
+    t0 = time.perf_counter()
+    for A, B in traffic[:warmup]:
+        service.submit(A, B)
+        service.pump()
+    service.drain()
+    t_warm = time.perf_counter() - t0
+    warm = service.stats()  # warmup-window stats, before the steady phase
+    snap = (len(service.completed), len(service.flush_log))
+    t1 = time.perf_counter()
+    for A, B in traffic[warmup:]:
+        service.submit(A, B)
+        service.pump()
+    service.drain()
+    t_steady = time.perf_counter() - t1
+    steady = service.stats(since_request=snap[0], since_flush=snap[1])
+    _emit("serve.warmup", t_warm / max(1, warmup),
+          f"reqs={warmup}|req_per_s={warmup / t_warm:.1f}|"
+          f"hit_rate={warm['plan_hit_rate']:.2f}")
+    _emit("serve.steady", t_steady / max(1, n - warmup),
+          f"reqs={n - warmup}|req_per_s={(n - warmup) / t_steady:.1f}|"
+          f"p50_us={steady['p50_latency_s'] * 1e6:.1f}|"
+          f"p95_us={steady['p95_latency_s'] * 1e6:.1f}|"
+          f"hit_rate={steady['plan_hit_rate']:.2f}|"
+          f"flushes={steady['n_flushes']}|buckets={steady['n_buckets']}")
+
+
 ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,
        "fig11": fig11, "table4": table4, "moe": moe_bench,
-       "kernels": kernels_bench, "dispatch": dispatch_bench}
+       "kernels": kernels_bench, "dispatch": dispatch_bench,
+       "serve": serve_bench}
 
 _NEEDS_MATS = ("table3", "fig8", "fig9", "fig10", "fig11", "dispatch")
 
@@ -357,6 +402,8 @@ def main() -> None:
                 fn(mats, fast=args.fast)
             else:
                 fn(mats)
+        elif name == "serve":
+            fn(fast=args.fast)
         else:
             fn()
         _flush_json(name)

@@ -5,7 +5,7 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import spgemm as sg
+from repro.core import spgemm_engines as sg
 from repro.core.formats import random_sparse
 from repro.kernels import ops
 

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import base as cb
-from repro.core import dispatch, spgemm as sg
+from repro.core import dispatch, spgemm_engines as sg
 from repro.core.formats import batch_csr, random_sparse
 from repro.models import model as M
 from repro.serving.engine import Engine, Request
@@ -59,6 +59,23 @@ def main():
     print(f"spgemm_batched: {len(mats)} ragged requests (+1 padding lane) "
           f"in {dt:.2f}s incl. compile; lanes match scl-array oracle; "
           f"valid={np.asarray(out.valid).tolist()}")
+
+    # Continuous serving: the same requests through the bucketed service
+    # (plan/execute + work-balanced lane sharding). The second pass of
+    # each bucket reuses the cached plan — the serving steady state.
+    from repro.serving.spgemm_service import SpGemmService
+    service = SpGemmService(max_batch=4, flush_timeout=0.01)
+    for m in mats:                      # warmup pass plans every bucket
+        service.submit(m, m)
+    service.drain()
+    snap = (len(service.completed), len(service.flush_log))
+    for m in mats:                      # steady state: cached plans only
+        service.submit(m, m)
+    service.drain()
+    s = service.stats(since_request=snap[0], since_flush=snap[1])
+    print(f"spgemm service steady state: {s['n_requests']} reqs in "
+          f"{s['n_flushes']} flushes over {s['n_buckets']} buckets; "
+          f"plan_hit_rate={s['plan_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core import spgemm as sg
+from repro.core import spgemm, spgemm_engines as sg
 from repro.core.formats import random_sparse
 
 
@@ -24,7 +24,7 @@ def run(name, A):
             C, st = sg.spgemm_spz(A, A, R=16, rsort=method.endswith("rsort"))
             extra = f" [{st.n_mssort} mssort + {st.n_mszip} mszip]"
         else:
-            C = sg.spgemm(A, A, method)
+            C = spgemm(A, A, engine=method)
             extra = ""
         dt = time.perf_counter() - t0
         d = np.asarray(C.to_dense())

@@ -1,3 +1,29 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core SpGEMM substrate: formats, engines, and the plan/execute dispatch.
+
+The canonical multiply entry point is ``repro.core.spgemm`` — the
+dispatch-layer function (``spgemm(A, B, engine="auto")``).  The engines
+*module* ``repro.core.spgemm`` (``work_stats``, ``spgemm_esc``,
+``spgemm_spz``, ...) stays importable under the stable alias
+``repro.core.spgemm_engines``; import order below matters — the alias
+must bind before ``dispatch.spgemm`` shadows the submodule name on the
+package.  The old ``spgemm_engines.spgemm(method=...)`` entry is a
+deprecated thin delegate to the dispatch layer.
+"""
+# 1) bind the engines module under its collision-free alias (this also
+#    loads the submodule, so `from repro.core.spgemm import X` keeps
+#    working everywhere)
+from repro.core import spgemm as spgemm_engines
+# 2) re-export the dispatch layer; `spgemm` (the function) intentionally
+#    shadows the submodule attribute from here on
+from repro.core.dispatch import (AutotuneCache, ExecutionPlan, available_engines,
+                                 execute, execute_batched, explain, plan,
+                                 plan_batched, register_engine, spgemm,
+                                 spgemm_batched)
+from repro.core.formats import BatchedCSR, CSR, batch_csr, random_sparse
+
+__all__ = [
+    "AutotuneCache", "BatchedCSR", "CSR", "ExecutionPlan",
+    "available_engines", "batch_csr", "execute", "execute_batched",
+    "explain", "plan", "plan_batched", "random_sparse", "register_engine",
+    "spgemm", "spgemm_batched", "spgemm_engines",
+]

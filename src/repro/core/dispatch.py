@@ -1,24 +1,34 @@
-"""SpGEMM engine registry, density-aware dispatch, and batched execution.
+"""SpGEMM engine registry, plan/execute dispatch, and batched execution.
 
 The paper's central observation (Table III / Fig. 8) is that no single
 SpGEMM strategy wins everywhere: scalar hash accumulation, vectorized
 Expand-Sort-Compress, and the SparseZipper merge path trade off by density,
 per-row work, and work skew. This module turns the five free functions in
-``core/spgemm.py`` into a serving-grade engine layer:
+``core/spgemm.py`` into a serving-grade engine layer, split into a
+**selection** phase and an **execution** phase:
 
   * a **registry** of named engines with declared capabilities (jittable,
     returns-stats, batchable, dtype support) — new engines plug in via
     :func:`register_engine`;
-  * :func:`spgemm` — ``spgemm(A, B, engine="auto")`` picks an engine from
-    cheap structural features (density, avg work/row, per-group work
-    variance) through an overridable heuristic table, or by one-shot
-    measurement (``autotune=True``);
+  * :func:`plan` — ``plan(A, B, engine="auto")`` resolves everything
+    data-dependent about a multiply *before* it runs: the engine (from
+    cheap structural features through an overridable heuristic table, a
+    cached prior selection, or one-shot measurement with
+    ``autotune=True``), the resolved engine kwargs, and the static
+    capacities that key the jit cache.  Plans are frozen, hashable, and
+    reusable across calls with matching operand structure;
+  * :func:`execute` — runs a plan against concrete operands.
+    ``spgemm(A, B, ...)`` is exactly ``execute(plan(A, B, ...), A, B)``;
   * an **autotune cache** persisted to disk and keyed by shape/nnz bucket,
-    so repeated shapes (the serving steady state) skip re-selection;
-  * :func:`spgemm_batched` — runs a whole :class:`BatchedCSR` batch through
-    a jittable engine under one compilation: ``esc`` via a vmapped core,
-    ``spz`` via a lock-step driver that packs rows from every batch lane
-    into shared fixed-capacity stream groups.
+    so repeated shapes (the serving steady state) skip re-selection, plus
+    an in-process plan memo keyed on operand identity so repeat calls on
+    the same matrices skip planning entirely;
+  * :func:`plan_batched` / :func:`execute_batched` — the same split for a
+    whole :class:`BatchedCSR` batch under one compilation: ``esc`` via a
+    vmapped core, ``spz`` via a lock-step driver that packs rows from
+    every batch lane into shared fixed-capacity stream groups.
+    ``distributed/spgemm_shard.py`` layers work-balanced multi-device
+    lane sharding on top of these plans.
 """
 from __future__ import annotations
 
@@ -29,13 +39,19 @@ import inspect
 import json
 import math
 import os
+import tempfile
 import time
-from typing import Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+# NB: ``repro.core.__init__`` binds the engines module under the alias
+# ``spgemm_engines`` *before* importing this module, then re-exports
+# ``dispatch.spgemm`` under the package-level name ``spgemm`` — so the
+# alias (not ``from repro.core import spgemm``) is the stable way to
+# reach the module once the package is initialized.
 from repro.core import spgemm as sg
 from repro.core.formats import (BatchedCSR, CSR, batch_csr, csr_from_coo,
                                 csr_to_numpy)
@@ -121,15 +137,17 @@ register_engine("spz-rsort",
 # features + heuristic table
 # ---------------------------------------------------------------------------
 
-class _FeatureCache:
-    """Bounded memo of structural features keyed on operand identity.
+class _OperandMemo:
+    """Bounded memo keyed on operand identity + a request discriminator.
 
     Serving repeats the same matrix objects call after call, and
-    ``BENCH_dispatch.json`` shows the ``work_stats`` recompute dominating
-    auto-selection (``select_us``).  The key is the operands' buffer
-    ``id()`` + shape + nnz + group; entries pin the index buffers so an
-    id cannot be recycled while its entry lives, and an ``is`` check on
-    hit guards against lookups racing a rebuild."""
+    ``BENCH_dispatch.json`` shows the selection work (``work_stats``
+    recompute, cache lookups) dominating auto-dispatch (``select_us``).
+    The key is the operands' buffer ``id()`` + shape + nnz + ``extra``
+    (the feature group, or the full plan request); entries pin the index
+    buffers so an id cannot be recycled while its entry lives, and an
+    ``is`` check on hit guards against lookups racing a rebuild.  One
+    instance memoizes feature dicts, another whole ExecutionPlans."""
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
@@ -138,23 +156,23 @@ class _FeatureCache:
         self._entries: collections.OrderedDict = collections.OrderedDict()
 
     @staticmethod
-    def _key(A: CSR, B: CSR, group: int):
+    def _key(A: CSR, B: CSR, extra):
         return (id(A.indices), id(B.indices), A.shape, B.shape,
                 int(np.asarray(A.indptr)[-1]), int(np.asarray(B.indptr)[-1]),
-                group)
+                extra)
 
-    def get(self, A: CSR, B: CSR, group: int) -> Optional[dict]:
-        key = self._key(A, B, group)
+    def get(self, A: CSR, B: CSR, extra) -> Optional[Any]:
+        key = self._key(A, B, extra)
         hit = self._entries.get(key)
         if hit is not None and hit[1] is A.indices and hit[2] is B.indices:
             self._entries.move_to_end(key)
             self.hits += 1
-            return dict(hit[0])
+            return hit[0]
         self.misses += 1
         return None
 
-    def put(self, A: CSR, B: CSR, group: int, feats: dict) -> None:
-        self._entries[self._key(A, B, group)] = (feats, A.indices, B.indices)
+    def put(self, A: CSR, B: CSR, extra, value) -> None:
+        self._entries[self._key(A, B, extra)] = (value, A.indices, B.indices)
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
 
@@ -163,12 +181,14 @@ class _FeatureCache:
         self.hits = self.misses = 0
 
 
-_feature_cache = _FeatureCache()
+_feature_cache = _OperandMemo()
+_plan_memo = _OperandMemo()
 
 
 def clear_feature_cache() -> None:
-    """Drop all memoized features (benchmarks measure cold selection)."""
+    """Drop memoized features and plans (benchmarks measure cold selection)."""
     _feature_cache.clear()
+    _plan_memo.clear()
 
 
 def extract_features(A: CSR, B: CSR, group: int = 16) -> dict:
@@ -180,8 +200,7 @@ def extract_features(A: CSR, B: CSR, group: int = 16) -> dict:
     if feats is None:
         feats = sg.work_stats(A, B, group=group)
         _feature_cache.put(A, B, group, feats)
-        feats = dict(feats)  # callers may mutate their copy, not the cache
-    return feats
+    return dict(feats)  # callers may mutate their copy, not the cache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,8 +259,19 @@ class AutotuneCache:
     ``source`` records how the entry was made: "heuristic" entries are
     upgraded in place by a later ``autotune=True`` call; "autotune" entries
     are sticky. Default path: ``$REPRO_AUTOTUNE_CACHE`` or
-    ``~/.cache/repro/spgemm_autotune.json``. Writes are atomic
-    (tmp + rename); a corrupt/missing file starts empty."""
+    ``~/.cache/repro/spgemm_autotune.json``.
+
+    Robustness (shared by concurrent serving processes): a corrupt or
+    truncated file is moved aside to ``<path>.corrupt`` and the cache
+    starts empty instead of crashing; writes go to a unique tempfile and
+    are published with an atomic rename, so readers never observe a
+    partial file; and every flush re-reads and merges the current
+    on-disk entries (an "autotune" entry from another process is never
+    downgraded by this process's "heuristic" one).  The merge is
+    best-effort — there is no file lock, so two *simultaneous* flushes
+    can still race between read and rename — but it shrinks the loss
+    window from "entire process lifetime" to that one flush, and a
+    dropped entry only costs a re-measurement, never correctness."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or os.environ.get(
@@ -249,15 +279,34 @@ class AutotuneCache:
             os.path.join(os.path.expanduser("~"), ".cache", "repro",
                          "spgemm_autotune.json"))
         self._entries: Optional[dict] = None
+        # bumped whenever a memoized plan may have been invalidated
+        # (autotune upgrades, clears) — keyed into the plan memo
+        self.version = 0
+
+    def _read_disk(self) -> Optional[dict]:
+        """Parse the on-disk file; {} when missing, None when corrupt."""
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (OSError, ValueError):
+            return None
+        if not isinstance(data, dict):
+            return None
+        return {k: v for k, v in data.items() if isinstance(v, dict)}
 
     def _load(self) -> dict:
         if self._entries is None:
-            try:
-                with open(self.path) as f:
-                    data = json.load(f)
-                self._entries = data if isinstance(data, dict) else {}
-            except (OSError, ValueError):
-                self._entries = {}
+            disk = self._read_disk()
+            if disk is None:
+                # corrupted/truncated: preserve the evidence, start empty
+                try:
+                    os.replace(self.path, self.path + ".corrupt")
+                except OSError:
+                    pass
+                disk = {}
+            self._entries = disk
         return self._entries
 
     def get(self, key: str) -> Optional[dict]:
@@ -265,25 +314,44 @@ class AutotuneCache:
 
     def put(self, key: str, engine: str, source: str) -> None:
         self._load()[key] = {"engine": engine, "source": source}
+        if source == "autotune":
+            self.version += 1
         self._flush()
 
     def _flush(self) -> None:
-        tmp = f"{self.path}.tmp.{os.getpid()}"
+        tmp = None
         try:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            with open(tmp, "w") as f:
+            # read-merge-write: keep entries concurrent processes flushed
+            # since we loaded; their measured plans beat our heuristics
+            disk = self._read_disk() or {}
+            for k, v in disk.items():
+                ours = self._entries.get(k)
+                if ours is None or (v.get("source") == "autotune"
+                                    and ours.get("source") != "autotune"):
+                    self._entries[k] = v
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(self.path) or ".",
+                prefix=os.path.basename(self.path) + ".tmp.")
+            with os.fdopen(fd, "w") as f:
                 json.dump(self._entries, f, indent=0, sort_keys=True)
             os.replace(tmp, self.path)
         except OSError:
             # cache is an optimization; never fail the multiply over it
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
 
     def clear(self) -> None:
+        """Drop all entries, in memory and on disk (no merge-back)."""
         self._entries = {}
-        self._flush()
+        self.version += 1
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
 
     def __len__(self) -> int:
         return len(self._load())
@@ -312,15 +380,16 @@ def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1) -> float:
 
 
 # ---------------------------------------------------------------------------
-# dispatch entry points
+# plan / execute dispatch
 # ---------------------------------------------------------------------------
 
 def _filter_kwargs(fn: Callable, kw: dict) -> dict:
     """Keep only kwargs ``fn`` accepts (everything, if it takes **kw).
 
     Auto-selection may route to any engine, so engine-specific kwargs
-    (e.g. spz's ``R``) must not crash a run that picked a different
-    engine; explicitly named engines still get strict kwargs."""
+    (e.g. spz's ``R``) must not crash a plan that picked a different
+    engine; explicitly named engines still get strict kwargs.  Runs once
+    at *plan* time — execution never re-inspects signatures."""
     try:
         params = inspect.signature(fn).parameters.values()
     except (TypeError, ValueError):
@@ -331,13 +400,52 @@ def _filter_kwargs(fn: Callable, kw: dict) -> dict:
     return {k: v for k, v in kw.items() if k in names}
 
 
-def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
-           autotune: bool = False,
-           cache: Optional[AutotuneCache] = None,
-           rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
-           return_stats: bool = False,
-           **kw):
-    """Multiply two padded CSR matrices through the engine registry.
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything selection decides about a multiply, frozen and hashable.
+
+    A plan captures the engine choice, the kwargs resolved against that
+    engine's signature, and the static-capacity facts (shapes, nnz work
+    bucket, batch lane count) that determine which compiled XLA
+    computation execution lands on — ``jit_key`` is that identity, so
+    two plans with equal ``jit_key`` reuse one compilation.  Plans are
+    inspectable (the serving layer logs ``engine``/``source`` per
+    flush), reusable across calls whose operands match the planned
+    structure, and cacheable by hash."""
+
+    engine: str                 # resolved engine (post fallback remap)
+    batched: bool               # single CSR pair vs BatchedCSR lanes
+    a_shape: tuple
+    b_shape: tuple
+    kwargs: tuple               # sorted (name, value) pairs, plan-resolved
+    work_bucket: tuple          # (nnz bucket A, nnz bucket B) — jit-relevant
+    cache_key: str              # autotune-cache key the selection used
+    source: str                 # "explicit" | "heuristic" | "cache" | "autotune"
+    rule: Optional[str] = None  # heuristic rule that fired (source="heuristic")
+    batch: Optional[int] = None  # lane capacity (batched plans only)
+
+    @property
+    def kwargs_dict(self) -> dict:
+        return dict(self.kwargs)
+
+    @property
+    def jit_key(self) -> tuple:
+        """Static identity of the compiled computation this plan routes
+        to: engine + operand structure + resolved static capacities."""
+        return (self.engine, self.batched, self.batch, self.a_shape,
+                self.b_shape, self.work_bucket, self.kwargs)
+
+
+def _sorted_kwargs(kw: dict) -> tuple:
+    return tuple(sorted(kw.items()))
+
+
+def plan(A: CSR, B: CSR, engine: str = "auto", *,
+         autotune: bool = False,
+         cache: Optional[AutotuneCache] = None,
+         rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+         **kw) -> ExecutionPlan:
+    """Select an engine and resolve kwargs for ``A @ B`` without running it.
 
     engine:  a registered name, or "auto" to select by cached plan /
              heuristic features / measurement.
@@ -347,34 +455,84 @@ def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
              Non-default ``rules`` bypass the cache entirely — a cached
              plan from other rules must not shadow the caller's table,
              nor may a custom-rule choice poison the shared cache.
-    return_stats: also return the engine's stats object (None for engines
-             without ``returns_stats``).
-    """
+
+    Repeat plans on the *same matrix objects* (the serving steady state)
+    are memoized on operand identity and skip selection entirely."""
     if A.n_cols != B.n_rows:
         raise ValueError(f"inner dims differ: {A.shape} @ {B.shape}")
-    selected = engine
+    use_cache = rules is DEFAULT_HEURISTICS
+    if cache is None:  # NB: `or` would drop an *empty* caller cache
+        cache = default_cache()
+    memo_extra = None
+    if engine == "auto" and use_cache and cache is default_cache():
+        try:
+            memo_extra = ("plan", autotune, cache.version, _sorted_kwargs(kw))
+            hit = _plan_memo.get(A, B, memo_extra)
+            if hit is not None:
+                return hit
+        except TypeError:  # unhashable kwarg value: skip the memo
+            memo_extra = None
+    key = cache_key(A, B)
+    selected, source, rule = engine, "explicit", None
     if engine == "auto":
-        use_cache = rules is DEFAULT_HEURISTICS
-        if cache is None:  # NB: `or` would drop an *empty* caller cache
-            cache = default_cache()
-        key = cache_key(A, B)
         hit = cache.get(key) if use_cache else None
         if hit is not None and (hit["source"] == "autotune" or not autotune):
-            selected = hit["engine"]
+            selected, source = hit["engine"], "cache"
         elif autotune:
             timings = {name: _measure(spec, A, B)
                        for name, spec in _REGISTRY.items() if spec.measure}
-            selected = min(timings, key=timings.get)
+            selected, source = min(timings, key=timings.get), "autotune"
             cache.put(key, selected, "autotune")
         else:
-            selected, _rule = choose_engine(extract_features(A, B), rules)
+            selected, rule = choose_engine(extract_features(A, B), rules)
+            source = "heuristic"
             if use_cache:
                 cache.put(key, selected, "heuristic")
     spec = get_engine(selected)
-    out = spec.fn(A, B, **(_filter_kwargs(spec.fn, kw)
-                           if engine == "auto" else kw))
+    resolved = _filter_kwargs(spec.fn, kw) if engine == "auto" else kw
+    p = ExecutionPlan(engine=selected, batched=False,
+                      a_shape=A.shape, b_shape=B.shape,
+                      kwargs=_sorted_kwargs(resolved),
+                      work_bucket=(_nnz_bucket(A), _nnz_bucket(B)),
+                      cache_key=key, source=source, rule=rule)
+    if memo_extra is not None:
+        _plan_memo.put(A, B, memo_extra, p)
+    return p
+
+
+def execute(p: ExecutionPlan, A: CSR, B: CSR, *,
+            return_stats: bool = False):
+    """Run a plan against concrete operands.
+
+    The operands must match the planned structure (shapes; the nnz
+    bucket may drift within the plan's padding capacities).  A plan made
+    once can be executed against every request with matching structure —
+    the selection cost is paid at plan time only."""
+    if p.batched:
+        raise ValueError("batched plan passed to execute(); "
+                         "use execute_batched()")
+    if A.shape != p.a_shape or B.shape != p.b_shape:
+        raise ValueError(
+            f"plan/operand mismatch: planned {p.a_shape} @ {p.b_shape}, "
+            f"got {A.shape} @ {B.shape}")
+    spec = get_engine(p.engine)
+    out = spec.fn(A, B, **p.kwargs_dict)
     out, stats = out if spec.returns_stats else (out, None)
     return (out, stats) if return_stats else out
+
+
+def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
+           autotune: bool = False,
+           cache: Optional[AutotuneCache] = None,
+           rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+           return_stats: bool = False,
+           **kw):
+    """Multiply two padded CSR matrices through the engine registry.
+
+    Exactly ``execute(plan(A, B, ...), A, B)`` — see :func:`plan` for
+    the selection knobs and :func:`execute` for the run semantics."""
+    p = plan(A, B, engine, autotune=autotune, cache=cache, rules=rules, **kw)
+    return execute(p, A, B, return_stats=return_stats)
 
 
 def explain(A: CSR, B: CSR,
@@ -494,53 +652,129 @@ def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
 # batchable engine (the scalar engines have no single-compilation path)
 _BATCH_FALLBACK = {"scl-array": "esc", "scl-hash": "esc"}
 
+# batched drivers per engine — every batchable registry entry routes here
+_BATCH_DRIVERS: dict[str, Callable] = {
+    "esc": _esc_batched,
+    "spz": _spz_batched,
+    "spz-fused": functools.partial(_spz_batched, driver="fused"),
+    "spz-host": functools.partial(_spz_batched, driver="host"),
+    "spz-rsort": functools.partial(_spz_batched, rsort=True),
+}
 
-def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
-                   rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
-                   **kw) -> BatchedCSR:
-    """Multiply a batch of same-shape CSR pairs under one compilation.
 
-    engine: "esc", "spz", "spz-rsort", or "auto" (features of the heaviest
-    valid lane pick the engine, then map onto a batchable one). Invalid
-    lanes pass through as empty matrices with ``valid=False``. Returns a
-    BatchedCSR whose lane capacity is the max output nnz."""
+def get_batch_driver(name: str) -> Callable:
+    """The batched driver callable for a (batchable) engine name — used by
+    the lane-sharding layer to run one device group at a time."""
+    try:
+        return _BATCH_DRIVERS[name]
+    except KeyError:
+        raise ValueError(f"engine {name!r} has no batched driver") from None
+
+
+def _check_batch(A: BatchedCSR, B: BatchedCSR) -> np.ndarray:
     if A.batch != B.batch or A.n_cols != B.n_rows:
         raise ValueError(f"batch mismatch: {A.batch}x{A.shape} @ "
                          f"{B.batch}x{B.shape}")
     lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
     if not lane_ok.any():
         raise ValueError("no valid lanes in batch")
-    selected = engine
+    return lane_ok
+
+
+def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
+                 cache: Optional[AutotuneCache] = None,
+                 rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                 lane_work_hint: Optional[Sequence[int]] = None,
+                 **kw) -> ExecutionPlan:
+    """Select a batchable engine and resolve static capacities for a batch.
+
+    engine: "esc", "spz", "spz-rsort", or "auto" (features of the
+    heaviest valid lane pick the engine — consulting and feeding the
+    same autotune cache as the single-matrix path, keyed on that lane —
+    then map onto a batchable one).  The resolved plan carries the
+    shared product capacity (esc) or stream geometry (spz) so identical
+    request structures reuse one compilation.
+
+    lane_work_hint: per-lane total row_work, if the caller already
+    computed it (the sharding layer does, for lane balancing) — skips
+    the recompute when sizing the esc product capacity."""
+    _check_batch(A, B)
+    i_heavy = max((i for i, _ in A.lanes()),
+                  key=lambda i: int(np.asarray(A[i].indptr)[-1]))
+    key = cache_key(A[i_heavy], B[i_heavy])
+    selected, source, rule = engine, "explicit", None
     if engine == "auto":
-        i_heavy = max((i for i, _ in A.lanes()),
-                      key=lambda i: int(np.asarray(A[i].indptr)[-1]))
-        selected, _ = choose_engine(
-            extract_features(A[i_heavy], B[i_heavy]), rules)
+        use_cache = rules is DEFAULT_HEURISTICS
+        if cache is None:
+            cache = default_cache()
+        hit = cache.get(key) if use_cache else None
+        if hit is not None:
+            selected, source = hit["engine"], "cache"
+        else:
+            selected, rule = choose_engine(
+                extract_features(A[i_heavy], B[i_heavy]), rules)
+            source = "heuristic"
+            if use_cache:
+                cache.put(key, selected, "heuristic")
     remapped = _BATCH_FALLBACK.get(selected, selected)
     spec = get_engine(remapped)
-    if not spec.batchable:
+    if not spec.batchable or remapped not in _BATCH_DRIVERS:
         raise ValueError(f"engine {remapped!r} has no batched path")
-    if remapped == "esc":
-        driver = _esc_batched
-    elif remapped == "spz":
-        driver = _spz_batched
-    elif remapped == "spz-fused":
-        driver = functools.partial(_spz_batched, driver="fused")
-    elif remapped == "spz-host":
-        driver = functools.partial(_spz_batched, driver="host")
-    elif remapped == "spz-rsort":
-        driver = functools.partial(_spz_batched, rsort=True)
-    else:
-        raise ValueError(f"engine {remapped!r} declared batchable but has "
-                         "no batched driver")
+    driver = _BATCH_DRIVERS[remapped]
     # auto selection / fallback remap may land on any driver: drop kwargs
     # it can't take (explicitly named engines keep strict kwargs)
     if engine == "auto" or remapped != engine:
         kw = _filter_kwargs(driver, kw)
-    outs = driver(A, B, **kw)
+    if remapped == "esc" and kw.get("cap_products") is None:
+        # shared power-of-two product capacity, resolved at plan time so
+        # the plan's jit_key fully determines the compiled computation
+        works = ([int(w) for w in lane_work_hint]
+                 if lane_work_hint is not None else
+                 [int(sg.row_work(a, B[i]).sum()) for i, a in A.lanes()])
+        kw["cap_products"] = _pow2_at_least(max(works + [1]))
+    return ExecutionPlan(engine=remapped, batched=True, batch=A.batch,
+                         a_shape=A.shape, b_shape=B.shape,
+                         kwargs=_sorted_kwargs(kw),
+                         work_bucket=(_nnz_bucket(A[i_heavy]),
+                                      _nnz_bucket(B[i_heavy])),
+                         cache_key=key, source=source, rule=rule)
+
+
+def _assemble_batched(outs: list, A: BatchedCSR, B: BatchedCSR) -> BatchedCSR:
+    """Stack per-lane results (None = invalid lane) into the output
+    BatchedCSR whose lane capacity is the max output nnz."""
     empty = csr_from_coo([], [], [], (A.n_rows, B.n_cols))
     cap = max(int(np.asarray(o.indptr)[-1]) for o in outs if o is not None)
     batched = batch_csr([o if o is not None else empty for o in outs],
                         nnz_cap=max(cap, 1))
     return BatchedCSR(batched.indptr, batched.indices, batched.data,
-                      jnp.asarray(A.valid) & jnp.asarray(B.valid), batched.shape)
+                      jnp.asarray(A.valid) & jnp.asarray(B.valid),
+                      batched.shape)
+
+
+def execute_batched(p: ExecutionPlan, A: BatchedCSR,
+                    B: BatchedCSR) -> BatchedCSR:
+    """Run a batched plan. Invalid lanes pass through as empty matrices
+    with ``valid=False``."""
+    if not p.batched:
+        raise ValueError("single-pair plan passed to execute_batched(); "
+                         "use execute()")
+    _check_batch(A, B)
+    if A.shape != p.a_shape or B.shape != p.b_shape or A.batch != p.batch:
+        raise ValueError(
+            f"plan/operand mismatch: planned {p.batch}x{p.a_shape} @ "
+            f"{p.b_shape}, got {A.batch}x{A.shape} @ {B.shape}")
+    outs = _BATCH_DRIVERS[p.engine](A, B, **p.kwargs_dict)
+    return _assemble_batched(outs, A, B)
+
+
+def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
+                   cache: Optional[AutotuneCache] = None,
+                   rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                   **kw) -> BatchedCSR:
+    """Multiply a batch of same-shape CSR pairs under one compilation.
+
+    Exactly ``execute_batched(plan_batched(A, B, ...), A, B)``; see
+    those for selection and execution semantics."""
+    p = plan_batched(A, B, engine, cache=cache, rules=rules, **kw)
+    return execute_batched(p, A, B)

@@ -647,22 +647,17 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
 
 
 def spgemm(A: CSR, B: CSR, method: str = "spz", **kw):
-    """Legacy dispatch front-end (core.dispatch.spgemm is the real one)."""
-    if method == "auto":
-        from repro.core import dispatch
-        return dispatch.spgemm(A, B, engine="auto", **kw)
-    if method == "scl-array":
-        return spgemm_scl_array(A, B)
-    if method == "scl-hash":
-        return spgemm_scl_hash(A, B)
-    if method == "esc":
-        return spgemm_esc(A, B, **kw)
-    if method == "spz":
-        return spgemm_spz(A, B, **kw)[0]
-    if method == "spz-fused":
-        return spgemm_spz(A, B, driver="fused", **kw)[0]
-    if method == "spz-host":
-        return spgemm_spz(A, B, driver="host", **kw)[0]
-    if method == "spz-rsort":
-        return spgemm_spz(A, B, rsort=True, **kw)[0]
-    raise ValueError(f"unknown method {method}")
+    """Deprecated front-end: use ``repro.core.spgemm(A, B, engine=...)``
+    (the canonical dispatch entry re-exported by ``repro.core``).
+
+    ``method`` names map 1:1 onto registered dispatch engines, so this
+    thin alias delegates straight to the registry and will be removed
+    once nothing imports it."""
+    import warnings
+
+    from repro.core import dispatch
+    warnings.warn(
+        "repro.core.spgemm.spgemm(method=...) is deprecated; call the "
+        "canonical repro.core spgemm (core.dispatch.spgemm) with "
+        "engine=... instead", DeprecationWarning, stacklevel=2)
+    return dispatch.spgemm(A, B, engine=method, **kw)

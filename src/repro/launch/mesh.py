@@ -14,6 +14,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_lane_mesh(n: int | None = None):
+    """1-D ("lanes",) mesh over the visible devices — the axis the
+    lane-sharded batched SpGEMM path (distributed/spgemm_shard.py) runs
+    its shard_map over. ``n`` caps the device count (default: all)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), ("lanes",), devices=devs[:n])
+
+
 def make_host_mesh(model_axis: int | None = None):
     """Largest (data, model) mesh on the visible devices (tests, examples)."""
     n = len(jax.devices())

@@ -1,0 +1,263 @@
+"""Continuous SpGEMM serving: request queue -> bucketed lanes -> sharded plan.
+
+The dispatch layer's caches only pay off under a *stream* of requests —
+the ROADMAP's "production traffic" direction.  This service closes that
+loop: callers ``submit`` CSR pairs of mixed shapes/densities; requests
+are queued per **pad bucket** (operand shapes + power-of-two nnz
+bounds), so every flush of a bucket builds ``BatchedCSR`` lanes with
+identical array shapes and lands on one already-compiled computation; a
+bucket flushes when it reaches ``max_batch`` lanes or its oldest
+request ages past ``flush_timeout``.  Execution goes through the
+work-balanced sharded plan path (``distributed/spgemm_shard.py``), and
+every flush records its plan provenance — after warmup, selections come
+from the autotune cache and the plan hit rate approaches 1.
+
+The clock is injectable (and ``submit``/``pump`` take an explicit
+``now``) so tests and benchmarks can drive deterministic virtual
+traffic; the CLI (``launch/serve_spgemm.py``) and the ``serve``
+benchmark section use it against the wall clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import dispatch as dp
+from repro.core.formats import CSR, batch_csr
+from repro.distributed import spgemm_shard as shard
+
+
+def _pow2_bucket(n: int) -> int:
+    """Power-of-two pad bound >= n (min 16): the nnz capacity every
+    request in a bucket is padded to, so one compiled computation serves
+    the whole bucket."""
+    return 1 << max(4, int(max(int(n), 1) - 1).bit_length())
+
+
+def bucket_key(A: CSR, B: CSR) -> tuple:
+    """(A.shape, B.shape, pad bucket of A.nnz, pad bucket of B.nnz)."""
+    nnz_a = int(np.asarray(A.indptr)[-1])
+    nnz_b = int(np.asarray(B.indptr)[-1])
+    return (A.shape, B.shape, _pow2_bucket(nnz_a), _pow2_bucket(nnz_b))
+
+
+@dataclasses.dataclass
+class SpGemmRequest:
+    """One queued multiply; ``result`` lands when its bucket flushes."""
+
+    A: CSR
+    B: CSR
+    id: int
+    t_submit: float
+    bucket: tuple
+    result: Optional[CSR] = None
+    t_done: Optional[float] = None
+    engine: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency(self) -> float:
+        if self.t_done is None:
+            raise ValueError(f"request {self.id} not finished")
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    """Per-flush provenance: which bucket ran, on what plan, and why."""
+
+    bucket: tuple
+    n_requests: int
+    engine: str
+    source: str        # "cache" = selection served from the autotune cache
+    reason: str        # "full" | "timeout" | "drain"
+    t: float
+    wall_s: float      # host wall-clock spent executing the flush
+
+    @property
+    def plan_hit(self) -> bool:
+        return self.source == "cache"
+
+
+class SpGemmService:
+    """Batched continuous serving over the plan/execute dispatch stack.
+
+    max_batch:     lanes per flush (also the BatchedCSR batch_cap, so
+                   every flush of a bucket compiles to the same shapes).
+    flush_timeout: seconds a bucket may age before ``pump`` flushes it
+                   partially filled.
+    engine/rules/cache: forwarded to planning (``plan_sharded``).
+    mesh:          lane mesh for sharded execution (default: all devices).
+    clock:         time source for submit/done stamps (injectable)."""
+
+    def __init__(self, *, max_batch: int = 8, flush_timeout: float = 0.02,
+                 engine: str = "auto",
+                 mesh=None,
+                 cache: Optional[dp.AutotuneCache] = None,
+                 rules=dp.DEFAULT_HEURISTICS,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.flush_timeout = flush_timeout
+        self.engine = engine
+        self.mesh = mesh
+        self.cache = cache if cache is not None else dp.default_cache()
+        self.rules = rules
+        self.clock = clock
+        self._queues: dict[tuple, list[SpGemmRequest]] = {}
+        self._opened: dict[tuple, float] = {}
+        self._bucket_caps: dict[tuple, int] = {}
+        self._next_id = 0
+        self.completed: list[SpGemmRequest] = []
+        self.flush_log: list[FlushRecord] = []
+
+    # -- intake ----------------------------------------------------------
+
+    def submit(self, A: CSR, B: CSR,
+               now: Optional[float] = None) -> SpGemmRequest:
+        """Queue one multiply; flushes its bucket if that fills it."""
+        if A.n_cols != B.n_rows:
+            raise ValueError(f"inner dims differ: {A.shape} @ {B.shape}")
+        now = self.clock() if now is None else now
+        key = bucket_key(A, B)
+        req = SpGemmRequest(A=A, B=B, id=self._next_id, t_submit=now,
+                            bucket=key)
+        self._next_id += 1
+        q = self._queues.setdefault(key, [])
+        if not q:
+            self._opened[key] = now
+        q.append(req)
+        if len(q) >= self.max_batch:
+            self._flush(key, now, reason="full")
+        return req
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- flushing --------------------------------------------------------
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """Flush every bucket whose oldest request aged past the
+        timeout; returns the number of requests completed."""
+        now = self.clock() if now is None else now
+        done = 0
+        for key in [k for k, t in self._opened.items()
+                    if now - t >= self.flush_timeout]:
+            done += self._flush(key, now, reason="timeout")
+        return done
+
+    def drain(self, now: Optional[float] = None) -> int:
+        """Flush everything regardless of age (shutdown / end of bench)."""
+        now = self.clock() if now is None else now
+        done = 0
+        for key in list(self._queues):
+            done += self._flush(key, now, reason="drain")
+        return done
+
+    def _stick_bucket_cap(self, key: tuple, sp):
+        """Pin a bucket's esc product capacity to its running maximum.
+
+        plan_batched sizes cap_products from the flush's actual lane
+        works, which can cross a power-of-two boundary between flushes
+        of the same pad bucket — a fresh XLA compile mid-steady-state.
+        Raising the cap to the bucket's historical max is always safe
+        (it is an upper bound) and makes the jit_key stable once the
+        bucket has seen its heaviest traffic."""
+        if sp.base.engine != "esc":
+            return sp
+        cap = sp.base.kwargs_dict.get("cap_products")
+        sticky = max(cap, self._bucket_caps.get(key, 0))
+        self._bucket_caps[key] = sticky
+        if sticky == cap:
+            return sp
+        kwargs = tuple(sorted({**sp.base.kwargs_dict,
+                               "cap_products": sticky}.items()))
+        return dataclasses.replace(
+            sp, base=dataclasses.replace(sp.base, kwargs=kwargs))
+
+    def _flush(self, key: tuple, now: float, reason: str) -> int:
+        reqs = self._queues.pop(key, [])
+        self._opened.pop(key, None)
+        if not reqs:
+            return 0
+        _, _, cap_a, cap_b = key
+        t0 = time.perf_counter()
+        A = batch_csr([r.A for r in reqs], nnz_cap=cap_a,
+                      batch_cap=self.max_batch)
+        B = batch_csr([r.B for r in reqs], nnz_cap=cap_b,
+                      batch_cap=self.max_batch)
+        sp = shard.plan_sharded(A, B, self.engine, mesh=self.mesh,
+                                cache=self.cache, rules=self.rules)
+        sp = self._stick_bucket_cap(key, sp)
+        out = shard.execute_sharded(sp, A, B)
+        wall = time.perf_counter() - t0
+        # completion is stamped AFTER execution, so latency includes the
+        # flush's own run (and compile) time under a real clock; virtual
+        # clocks simply read whatever the test advanced them to
+        t_done = self.clock()
+        for i, r in enumerate(reqs):
+            r.result = out[i]
+            r.t_done = t_done
+            r.engine = sp.base.engine
+        self.completed.extend(reqs)
+        self.flush_log.append(FlushRecord(
+            bucket=key, n_requests=len(reqs), engine=sp.base.engine,
+            source=sp.base.source, reason=reason, t=now, wall_s=wall))
+        return len(reqs)
+
+    # -- accounting ------------------------------------------------------
+
+    def stats(self, since_request: int = 0, since_flush: int = 0) -> dict:
+        """Aggregate serving stats over ``completed[since_request:]`` /
+        ``flush_log[since_flush:]`` (snapshot the list lengths at the end
+        of warmup to get steady-state numbers)."""
+        done = self.completed[since_request:]
+        flushes = self.flush_log[since_flush:]
+        lat = np.asarray([r.latency for r in done], np.float64)
+        out = {
+            "n_requests": len(done),
+            "n_flushes": len(flushes),
+            "n_buckets": len({f.bucket for f in flushes}),
+            "pending": self.pending,
+        }
+        if len(done):
+            span = max(r.t_done for r in done) - min(r.t_submit for r in done)
+            out["req_per_s"] = len(done) / max(span, 1e-9)
+            out["p50_latency_s"] = float(np.percentile(lat, 50))
+            out["p95_latency_s"] = float(np.percentile(lat, 95))
+            out["mean_latency_s"] = float(lat.mean())
+        if flushes:
+            # request-weighted: the fraction of traffic served off a
+            # cached plan (a rare new pad bucket is one small miss-flush,
+            # not 1/Nth of the steady state)
+            n_req = sum(f.n_requests for f in flushes)
+            out["plan_hit_rate"] = (sum(f.n_requests for f in flushes
+                                        if f.plan_hit) / n_req)
+            out["flush_hit_rate"] = (sum(f.plan_hit for f in flushes)
+                                     / len(flushes))
+            out["mean_flush_wall_s"] = float(np.mean([f.wall_s
+                                                      for f in flushes]))
+            out["mean_lanes_per_flush"] = float(np.mean([f.n_requests
+                                                         for f in flushes]))
+        return out
+
+    def bucket_outcomes(self) -> dict:
+        """Per-bucket autotune outcome: flush count, requests served, the
+        engines that ran, and how often selection came from the cache."""
+        buckets: dict[tuple, dict] = {}
+        for f in self.flush_log:
+            b = buckets.setdefault(f.bucket, {
+                "flushes": 0, "requests": 0, "plan_hits": 0, "engines": {}})
+            b["flushes"] += 1
+            b["requests"] += f.n_requests
+            b["plan_hits"] += int(f.plan_hit)
+            b["engines"][f.engine] = b["engines"].get(f.engine, 0) + 1
+        return buckets

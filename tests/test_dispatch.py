@@ -15,7 +15,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import dispatch as dp
-from repro.core import spgemm as sg
+from repro.core import spgemm_engines as sg
 from repro.core.formats import BatchedCSR, batch_csr, random_sparse
 
 
@@ -130,7 +130,8 @@ def test_auto_drops_engine_specific_kwargs(cache):
     # batched: esc-only kwarg survives auto->spz-family remap
     mats = _ragged_batch()
     b = batch_csr(mats)
-    out = dp.spgemm_batched(b, b, engine="auto", cap_products=1 << 16)
+    out = dp.spgemm_batched(b, b, engine="auto", cache=cache,
+                            cap_products=1 << 16)
     for i, m in enumerate(mats):
         np.testing.assert_allclose(_dense(out[i]),
                                    _dense(sg.spgemm_scl_array(m, m)),
@@ -180,6 +181,67 @@ def test_corrupt_cache_file_starts_empty(tmp_path):
     c.put("k", "esc", "heuristic")
     assert dp.AutotuneCache(str(p)).get("k") == {"engine": "esc",
                                                  "source": "heuristic"}
+    # the corrupt payload was moved aside, not silently destroyed
+    assert (tmp_path / "autotune.json.corrupt").read_text() == "{not json"
+
+
+def test_truncated_cache_file_recovers(tmp_path):
+    """A flush interrupted mid-write in older versions left a truncated
+    JSON file; loading one must recover to empty and keep serving."""
+    import json
+    p = tmp_path / "autotune.json"
+    full = json.dumps({"k": {"engine": "esc", "source": "heuristic"}})
+    p.write_text(full[:len(full) // 2])
+    c = dp.AutotuneCache(str(p))
+    assert len(c) == 0
+    c.put("k2", "spz", "heuristic")
+    assert dp.AutotuneCache(str(p)).get("k2") is not None
+
+
+def test_flush_is_atomic_tempfile_rename(tmp_path, monkeypatch):
+    """Writes go to a tempfile and are published by rename: a reader (or
+    a crash) between the write and the rename still sees the previous
+    complete file, never a partial one."""
+    import os
+    p = tmp_path / "autotune.json"
+    c = dp.AutotuneCache(str(p))
+    c.put("k1", "esc", "heuristic")
+    before = p.read_text()
+    real_replace = os.replace
+    seen = {}
+
+    def failing_replace(srcf, dst):
+        if dst == str(p):
+            seen["tmp"] = srcf
+            raise OSError("simulated crash before publish")
+        return real_replace(srcf, dst)
+
+    monkeypatch.setattr(os, "replace", failing_replace)
+    c.put("k2", "spz", "heuristic")
+    monkeypatch.undo()
+    # the tempfile was used, the target file was never touched
+    assert seen["tmp"] != str(p)
+    assert p.read_text() == before
+    assert dp.AutotuneCache(str(p)).get("k2") is None
+
+
+def test_concurrent_writers_merge_not_clobber(tmp_path):
+    """Two cache objects on one path (two serving processes): a put from
+    one must not erase the other's entries, and a measured ("autotune")
+    entry is never downgraded by a later heuristic writer."""
+    p = str(tmp_path / "autotune.json")
+    c1, c2 = dp.AutotuneCache(p), dp.AutotuneCache(p)
+    c1.put("a", "esc", "heuristic")
+    c2.put("b", "spz", "autotune")      # c2 loaded before c1's write? no:
+    # c2 first touches disk here, so it merges c1's entry on flush
+    reread = dp.AutotuneCache(p)
+    assert reread.get("a") == {"engine": "esc", "source": "heuristic"}
+    assert reread.get("b") == {"engine": "spz", "source": "autotune"}
+    # c1 (stale in-memory view) re-puts "b" heuristically: the on-disk
+    # autotune entry must survive the merge
+    c1.put("b", "esc", "heuristic")
+    assert dp.AutotuneCache(p).get("b") == {"engine": "spz",
+                                            "source": "autotune"}
 
 
 # ---------------------------------------------------------------------------
@@ -194,11 +256,11 @@ def _ragged_batch(seed=0, n=48):
 
 
 @pytest.mark.parametrize("engine", ["esc", "spz", "spz-rsort", "auto"])
-def test_batched_equals_per_matrix(engine):
+def test_batched_equals_per_matrix(engine, cache):
     mats = _ragged_batch()
     A = batch_csr(mats, batch_cap=len(mats) + 2)  # two padding lanes
     kw = {"R": 8, "S": 32} if engine.startswith("spz") else {}
-    out = dp.spgemm_batched(A, A, engine=engine, **kw)
+    out = dp.spgemm_batched(A, A, engine=engine, cache=cache, **kw)
     assert isinstance(out, BatchedCSR)
     assert np.asarray(out.valid).tolist() == [True] * len(mats) + [False] * 2
     for i, m in enumerate(mats):

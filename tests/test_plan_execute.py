@@ -1,0 +1,186 @@
+"""Plan/execute dispatch split: plans are inspectable, hashable, reusable,
+and execution round-trips bit-identical to the one-shot spgemm() path for
+every registered engine (single and batched)."""
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dp
+from repro.core import spgemm_engines as sg
+from repro.core.formats import batch_csr, random_sparse
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _bit_equal(a, b):
+    nnz = int(np.asarray(a.indptr)[-1])
+    assert np.array_equal(np.asarray(a.indptr), np.asarray(b.indptr))
+    assert np.array_equal(np.asarray(a.indices)[:nnz],
+                          np.asarray(b.indices)[:nnz])
+    assert np.array_equal(np.asarray(a.data)[:nnz], np.asarray(b.data)[:nnz])
+
+
+# ---------------------------------------------------------------------------
+# single-pair plans
+# ---------------------------------------------------------------------------
+
+def test_plan_execute_bit_identical_all_engines():
+    """execute(plan(...)) == the engine called directly, bit for bit."""
+    A = random_sparse(64, 64, 0.04, seed=7, pattern="powerlaw")
+    for name, spec in dp.available_engines().items():
+        direct = spec.fn(A, A)
+        direct = direct[0] if spec.returns_stats else direct
+        p = dp.plan(A, A, name)
+        out = dp.execute(p, A, A)
+        assert p.engine == name and p.source == "explicit"
+        _bit_equal(direct, out)
+
+
+def test_plan_is_hashable_and_inspectable(cache):
+    A = random_sparse(64, 64, 0.05, seed=0)
+    p = dp.plan(A, A, "auto", cache=cache)
+    assert isinstance(hash(p), int)
+    assert p.engine in dp.available_engines()
+    assert p.source == "heuristic" and p.rule is not None
+    assert p.cache_key == dp.cache_key(A, A)
+    # the jit identity: engine + operand structure + static capacities
+    assert p.jit_key[0] == p.engine
+    assert p.a_shape in p.jit_key and p.b_shape in p.jit_key
+    # an explicit plan for the same engine lands on the same computation
+    assert dp.plan(A, A, p.engine).jit_key == p.jit_key
+    # second plan on the same shape bucket comes from the cache
+    p2 = dp.plan(A, A, "auto", cache=cache)
+    assert p2.source == "cache" and p2.engine == p.engine
+
+
+def test_plan_reusable_across_matching_requests(cache):
+    """One plan, many executions — the serving steady state."""
+    A = random_sparse(48, 48, 0.05, seed=1)
+    p = dp.plan(A, A, "auto", cache=cache)
+    want = np.asarray(sg.spgemm_scl_array(A, A).to_dense())
+    for seed in (2, 3):
+        M = random_sparse(48, 48, 0.05, seed=seed)
+        out = dp.execute(p, M, M)
+        np.testing.assert_allclose(
+            np.asarray(out.to_dense()),
+            np.asarray(sg.spgemm_scl_array(M, M).to_dense()),
+            rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dp.execute(p, A, A).to_dense()),
+                               want, rtol=1e-4, atol=1e-4)
+
+
+def test_execute_rejects_structure_mismatch(cache):
+    A = random_sparse(32, 32, 0.05, seed=0)
+    C = random_sparse(16, 16, 0.05, seed=0)
+    p = dp.plan(A, A, "esc")
+    with pytest.raises(ValueError, match="mismatch"):
+        dp.execute(p, C, C)
+
+
+def test_plan_resolves_kwargs_at_plan_time(cache):
+    """auto drops kwargs the selected engine can't take; explicit engines
+    stay strict (the TypeError fires at execute)."""
+    A = random_sparse(64, 64, 0.05, seed=3)  # dense regime -> esc
+    p = dp.plan(A, A, "auto", cache=cache, R=16, impl="xla")
+    if p.engine == "esc":
+        assert "R" not in p.kwargs_dict
+    out = dp.execute(p, A, A)
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.asarray(sg.spgemm_scl_array(A, A).to_dense()),
+                               rtol=1e-4, atol=1e-4)
+    strict = dp.plan(A, A, "esc", R=16)
+    assert strict.kwargs_dict == {"R": 16}
+    with pytest.raises(TypeError):
+        dp.execute(strict, A, A)
+
+
+def test_plan_memo_on_operand_identity(tmp_path, monkeypatch):
+    """Repeat plans on the same matrix objects skip selection entirely
+    (memo hit returns the identical plan object)."""
+    dp.clear_feature_cache()
+    monkeypatch.setattr(dp, "_default_cache",
+                        dp.AutotuneCache(str(tmp_path / "private.json")))
+    A = random_sparse(48, 48, 0.03, seed=5)
+    before = dp._plan_memo.hits
+    p1 = dp.plan(A, A, "auto")
+    p2 = dp.plan(A, A, "auto")
+    assert p2 is p1
+    assert dp._plan_memo.hits == before + 1
+    dp.clear_feature_cache()
+
+
+def test_plan_memo_invalidated_by_autotune(tmp_path, monkeypatch):
+    """An autotune upgrade must not be shadowed by a stale memoized plan."""
+    dp.clear_feature_cache()
+    c = dp.AutotuneCache(str(tmp_path / "private.json"))
+    monkeypatch.setattr(dp, "_default_cache", c)
+    A = random_sparse(24, 24, 0.05, seed=1)
+    p1 = dp.plan(A, A, "auto")
+    tuned = dp.plan(A, A, "auto", autotune=True)
+    assert tuned.source == "autotune"
+    p2 = dp.plan(A, A, "auto")
+    assert p2.source == "cache" and p2.engine == tuned.engine
+    assert p1 is not p2
+    dp.clear_feature_cache()
+
+
+# ---------------------------------------------------------------------------
+# batched plans
+# ---------------------------------------------------------------------------
+
+def _ragged_batch(seed=0, n=48):
+    densities = (0.004, 0.05, 0.015, 0.03)
+    return [random_sparse(n, n, d, seed=seed + i)
+            for i, d in enumerate(densities)]
+
+
+@pytest.mark.parametrize("engine", ["esc", "spz", "auto"])
+def test_plan_execute_batched_bit_identical(engine, cache):
+    mats = _ragged_batch()
+    A = batch_csr(mats, batch_cap=6)
+    kw = {"R": 8, "S": 32} if engine.startswith("spz") else {}
+    want = dp.spgemm_batched(A, A, engine=engine, cache=cache, **kw)
+    p = dp.plan_batched(A, A, engine, cache=cache, **kw)
+    got = dp.execute_batched(p, A, A)
+    assert p.batched and p.batch == A.batch
+    for name in ("indptr", "indices", "data", "valid"):
+        assert np.array_equal(np.asarray(getattr(want, name)),
+                              np.asarray(getattr(got, name))), name
+
+
+def test_batched_plan_resolves_static_capacity(cache):
+    """esc batched plans pin the shared pow2 product capacity at plan
+    time, so the plan's jit_key fully determines the compilation."""
+    mats = _ragged_batch()
+    A = batch_csr(mats)
+    p = dp.plan_batched(A, A, "esc", cache=cache)
+    cap = p.kwargs_dict["cap_products"]
+    assert cap & (cap - 1) == 0  # power of two
+    works = max(int(sg.row_work(m, m).sum()) for m in mats)
+    assert cap >= works
+    assert p.jit_key == dp.plan_batched(A, A, "esc", cache=cache).jit_key
+
+
+def test_batched_auto_feeds_autotune_cache(cache):
+    """Batched auto selection consults and persists the same autotune
+    cache as the single-matrix path (the serving steady state)."""
+    mats = _ragged_batch()
+    A = batch_csr(mats)
+    p1 = dp.plan_batched(A, A, "auto", cache=cache)
+    assert p1.source == "heuristic"
+    assert cache.get(p1.cache_key) is not None
+    p2 = dp.plan_batched(A, A, "auto", cache=cache)
+    assert p2.source == "cache" and p2.engine == p1.engine
+
+
+def test_execute_batched_rejects_wrong_plan_kind(cache):
+    A = random_sparse(32, 32, 0.05, seed=0)
+    b = batch_csr(_ragged_batch())
+    single = dp.plan(A, A, "esc")
+    batched = dp.plan_batched(b, b, "esc", cache=cache)
+    with pytest.raises(ValueError, match="batched"):
+        dp.execute_batched(single, b, b)
+    with pytest.raises(ValueError, match="batched"):
+        dp.execute(batched, A, A)

@@ -1,0 +1,170 @@
+"""Lane-sharded batched SpGEMM: balanced assignment properties and
+bit-exact equivalence with the single-device batched path.
+
+These tests adapt to the visible device count: on a 1-device CPU they
+exercise the full code path over a trivial mesh; the CI multi-device
+lane runs them under XLA_FLAGS=--xla_force_host_platform_device_count=8
+where the shard_map actually spans 8 devices. One slow test forces the
+8-device case in a subprocess regardless of the parent's device count."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import dispatch as dp
+from repro.core import spgemm_engines as sg
+from repro.core.formats import batch_csr, random_sparse
+from repro.distributed import spgemm_shard as shard
+from repro.launch.mesh import make_lane_mesh
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _mixed_batch(seed=0):
+    """Mixed densities/patterns -> very skewed per-lane work."""
+    specs = [(0.004, "uniform"), (0.05, "uniform"), (0.02, "powerlaw"),
+             (0.03, "banded"), (0.01, "uniform"), (0.04, "powerlaw")]
+    return [random_sparse(64, 64, d, seed=seed + i, pattern=p)
+            for i, (d, p) in enumerate(specs)]
+
+
+def _assert_bit_equal(a, b):
+    for name in ("indptr", "indices", "data", "valid"):
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), name
+
+
+# ---------------------------------------------------------------------------
+# assignment
+# ---------------------------------------------------------------------------
+
+def test_assign_lanes_is_balanced():
+    """LPT keeps the max device load within 2x of the ideal split (the
+    classic 4/3 bound, loosened for integer lane counts)."""
+    rng = np.random.default_rng(0)
+    works = rng.zipf(1.5, 64) * 100
+    for n_dev in (2, 4, 8):
+        dev = shard.assign_lanes(works, n_dev)
+        loads = np.bincount(dev, weights=works, minlength=n_dev)
+        counts = np.bincount(dev, minlength=n_dev)
+        assert counts.max() <= -(-len(works) // n_dev)
+        ideal = works.sum() / n_dev
+        # greedy makespan bound: never worse than ideal + one heaviest lane
+        assert loads.max() <= ideal + works.max()
+
+
+def test_assign_lanes_respects_slot_cap():
+    dev = shard.assign_lanes(np.array([5, 4, 3, 2, 1, 0]), 3)
+    assert np.bincount(dev, minlength=3).max() == 2
+
+
+def test_shard_plan_layout(cache):
+    mats = _mixed_batch()
+    A = batch_csr(mats, batch_cap=8)
+    sp = shard.plan_sharded(A, A, "esc", cache=cache)
+    assert sp.n_dev == len(jax.devices())
+    assert sp.n_slots == sp.n_dev * sp.lanes_per_dev
+    assert sorted(set(sp.slot_of_lane)) == sorted(sp.slot_of_lane)  # 1:1
+    assert len(sp.works) == A.batch
+    assert sum(sp.device_loads()) == sum(sp.works)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact equivalence vs the single-device batched path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["esc", "spz", "spz-rsort", "auto"])
+def test_sharded_matches_batched_bit_exact(engine, cache):
+    mats = _mixed_batch()
+    A = batch_csr(mats, batch_cap=8)  # two invalid padding lanes
+    kw = {"R": 8, "S": 32} if engine.startswith("spz") else {}
+    ref = dp.spgemm_batched(A, A, engine=engine, cache=cache, **kw)
+    got = shard.spgemm_batched_sharded(A, A, engine=engine, cache=cache,
+                                       **kw)
+    _assert_bit_equal(ref, got)
+
+
+def test_sharded_results_match_oracle(cache):
+    mats = _mixed_batch(seed=3)
+    A = batch_csr(mats)
+    out = shard.spgemm_batched_sharded(A, A, engine="esc", cache=cache)
+    for i, m in enumerate(mats):
+        want = np.asarray(sg.spgemm_scl_array(m, m).to_dense(), np.float64)
+        np.testing.assert_allclose(np.asarray(out[i].to_dense(), np.float64),
+                                   want, rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_plan_reuse(cache):
+    """One ShardPlan executes repeatedly (the service flush path)."""
+    mats = _mixed_batch(seed=5)
+    A = batch_csr(mats)
+    sp = shard.plan_sharded(A, A, "esc", cache=cache)
+    a = shard.execute_sharded(sp, A, A)
+    b = shard.execute_sharded(sp, A, A)
+    _assert_bit_equal(a, b)
+
+
+def test_sharded_rejects_mismatched_operands(cache):
+    A = batch_csr(_mixed_batch())
+    B = batch_csr(_mixed_batch()[:3])
+    sp = shard.plan_sharded(A, A, "esc", cache=cache)
+    with pytest.raises(ValueError, match="mismatch"):
+        shard.execute_sharded(sp, B, B)
+    # an all-invalid operand pair fails with the same clean error as the
+    # single-device path, not a raw max()-of-empty crash in assembly
+    import jax.numpy as jnp
+    from repro.core.formats import BatchedCSR
+    dead = BatchedCSR(A.indptr, A.indices, A.data,
+                      jnp.zeros(A.batch, bool), A.shape)
+    with pytest.raises(ValueError, match="no valid lanes"):
+        shard.execute_sharded(sp, dead, dead)
+
+
+def test_lane_mesh_shape():
+    mesh = make_lane_mesh()
+    assert mesh.axis_names == ("lanes",)
+    assert mesh.shape["lanes"] == len(jax.devices())
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device equivalence (subprocess; slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_matches_batched_on_8_devices():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {repr(src)})
+import numpy as np, jax, tempfile
+from repro.core import dispatch as dp
+from repro.core.formats import batch_csr, random_sparse
+from repro.distributed import spgemm_shard as shard
+assert len(jax.devices()) == 8
+cache = dp.AutotuneCache(tempfile.mkdtemp() + "/c.json")
+mats = [random_sparse(64, 64, d, seed=i, pattern=p)
+        for i, (d, p) in enumerate([(0.004, "uniform"), (0.05, "uniform"),
+                                    (0.02, "powerlaw"), (0.03, "banded"),
+                                    (0.01, "uniform"), (0.04, "powerlaw")])]
+A = batch_csr(mats, batch_cap=10)
+for eng in ("esc", "spz", "auto"):
+    ref = dp.spgemm_batched(A, A, engine=eng, cache=cache)
+    sp = shard.plan_sharded(A, A, engine=eng, cache=cache)
+    assert sp.n_dev == 8
+    got = shard.execute_sharded(sp, A, A)
+    for name in ("indptr", "indices", "data", "valid"):
+        assert np.array_equal(np.asarray(getattr(ref, name)),
+                              np.asarray(getattr(got, name))), (eng, name)
+print("SHARD8_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600)
+    assert "SHARD8_OK" in r.stdout, r.stdout + r.stderr

@@ -14,7 +14,7 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import spgemm as sg
+from repro.core import spgemm, spgemm_engines as sg
 from repro.core.formats import (EMPTY, csr_from_coo, csr_from_dense,
                                 csr_to_numpy, random_sparse)
 from repro.kernels import ref
@@ -29,7 +29,19 @@ def _dense(m):
 def test_methods_match_oracle(pattern, method):
     A = random_sparse(96, 96, 0.03, seed=11, pattern=pattern)
     want = _dense(sg.spgemm_scl_array(A, A))
-    got = _dense(sg.spgemm(A, A, method))
+    got = _dense(spgemm(A, A, engine=method))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_canonical_spgemm_is_dispatch_and_alias_deprecated():
+    """repro.core exports the dispatch entry as THE spgemm; the old
+    module-level spgemm(method=...) survives as a deprecated delegate."""
+    from repro.core import dispatch
+    assert spgemm is dispatch.spgemm
+    A = random_sparse(32, 32, 0.05, seed=2)
+    want = _dense(sg.spgemm_scl_array(A, A))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        got = _dense(sg.spgemm(A, A, "esc"))
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 

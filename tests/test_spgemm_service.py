@@ -1,0 +1,188 @@
+"""Continuous SpGEMM service: bucketing, flush triggers (batch-full /
+timeout / drain), result correctness, latency accounting, and the
+autotune-cache steady state (>90% plan hit rate after warmup on mixed
+synthetic traffic). All timing is driven through an injected virtual
+clock, so every assertion is deterministic."""
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dp
+from repro.core import spgemm_engines as sg
+from repro.core.formats import random_sparse
+from repro.serving import spgemm_service as svc
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _service(cache, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("flush_timeout", 1.0)
+    clock = VirtualClock()
+    return svc.SpGemmService(cache=cache, clock=clock, **kw), clock
+
+
+def _mat(n=48, density=0.02, seed=0, pattern="uniform"):
+    return random_sparse(n, n, density, seed=seed, pattern=pattern)
+
+
+# ---------------------------------------------------------------------------
+# bucketing + flush triggers
+# ---------------------------------------------------------------------------
+
+def test_bucket_key_pads_to_pow2():
+    A = _mat(seed=1)
+    key = svc.bucket_key(A, A)
+    assert key[0] == key[1] == (48, 48)
+    nnz = int(np.asarray(A.indptr)[-1])
+    assert key[2] >= nnz and key[2] & (key[2] - 1) == 0
+
+
+def test_flush_on_batch_full(cache):
+    service, clock = _service(cache, max_batch=3)
+    reqs = [service.submit(_mat(seed=s), _mat(seed=s)) for s in (1, 1, 1)]
+    assert all(r.done for r in reqs)          # third submit filled the bucket
+    assert service.pending == 0
+    assert service.flush_log[-1].reason == "full"
+    assert service.flush_log[-1].n_requests == 3
+
+
+def test_flush_on_timeout_via_pump(cache):
+    service, clock = _service(cache, max_batch=8, flush_timeout=0.5)
+    r = service.submit(_mat(seed=2), _mat(seed=2))
+    assert not r.done and service.pump() == 0  # too young
+    clock.advance(0.6)
+    assert service.pump() == 1
+    assert r.done and service.flush_log[-1].reason == "timeout"
+    assert r.latency == pytest.approx(0.6)
+
+
+def test_mixed_shapes_land_in_separate_buckets(cache):
+    service, clock = _service(cache, max_batch=2)
+    a = service.submit(_mat(n=32, seed=1), _mat(n=32, seed=1))
+    b = service.submit(_mat(n=48, seed=1), _mat(n=48, seed=1))
+    assert a.bucket != b.bucket and service.pending == 2
+    service.drain()
+    assert a.done and b.done
+    assert {f.reason for f in service.flush_log} == {"drain"}
+
+
+def test_submit_validates_dims(cache):
+    service, _ = _service(cache)
+    with pytest.raises(ValueError, match="inner dims"):
+        service.submit(_mat(n=32), _mat(n=48))
+
+
+# ---------------------------------------------------------------------------
+# correctness
+# ---------------------------------------------------------------------------
+
+def test_results_match_oracle(cache):
+    service, clock = _service(cache, max_batch=4)
+    mats = [_mat(seed=s, density=d, pattern=p)
+            for s, (d, p) in enumerate([(0.004, "uniform"),
+                                        (0.05, "uniform"),
+                                        (0.02, "powerlaw"),
+                                        (0.03, "banded")])]
+    reqs = [service.submit(m, m) for m in mats]
+    service.drain()
+    for r, m in zip(reqs, mats):
+        want = np.asarray(sg.spgemm_scl_array(m, m).to_dense(), np.float64)
+        got = np.asarray(r.result.to_dense(), np.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        assert r.engine in dp.available_engines()
+
+
+# ---------------------------------------------------------------------------
+# steady state
+# ---------------------------------------------------------------------------
+
+def test_plan_hit_rate_exceeds_90pct_after_warmup(cache):
+    """Mixed synthetic traffic: after one warmup pass over the traffic
+    classes, selections come from the autotune cache and the plan hit
+    rate clears 0.9 — the acceptance bar for the serving layer."""
+    service, clock = _service(cache, max_batch=4, flush_timeout=10.0)
+    rng = np.random.default_rng(0)
+    classes = [(32, 0.02, "uniform"), (48, 0.05, "uniform"),
+               (48, 0.008, "powerlaw"), (64, 0.03, "banded")]
+    mats = {c: _mat(n=c[0], density=c[1], pattern=c[2], seed=i)
+            for i, c in enumerate(classes)}
+    # warmup: one request per class, then drain -> every bucket planned
+    for c in classes:
+        service.submit(mats[c], mats[c], now=clock.advance(0.001))
+    service.drain()
+    snap = (len(service.completed), len(service.flush_log))
+    # steady state: 60 requests over the same classes
+    for _ in range(60):
+        c = classes[int(rng.integers(len(classes)))]
+        service.submit(mats[c], mats[c], now=clock.advance(0.001))
+    service.drain()
+    stats = service.stats(since_request=snap[0], since_flush=snap[1])
+    assert stats["n_requests"] == 60
+    assert stats["plan_hit_rate"] > 0.9, stats
+    assert stats["p50_latency_s"] <= stats["p95_latency_s"]
+    assert stats["req_per_s"] > 0
+
+
+def test_stats_and_bucket_outcomes(cache):
+    service, clock = _service(cache, max_batch=2)
+    m = _mat(seed=9)
+    for _ in range(4):
+        service.submit(m, m, now=clock.advance(0.01))
+    service.drain()
+    stats = service.stats()
+    assert stats["n_requests"] == 4 and stats["n_flushes"] == 2
+    assert stats["n_buckets"] == 1 and stats["pending"] == 0
+    outcomes = service.bucket_outcomes()
+    assert len(outcomes) == 1
+    (key, b), = outcomes.items()
+    assert b["requests"] == 4 and b["flushes"] == 2
+    assert b["plan_hits"] >= 1          # second flush reuses the cached plan
+    assert sum(b["engines"].values()) == 2
+
+
+def test_esc_bucket_cap_is_sticky(cache):
+    """Flushes of one pad bucket must not flap the esc product capacity
+    across a pow2 boundary (each flap is a fresh XLA compile): the
+    service pins each bucket's cap_products to its running maximum, and
+    a raised cap (always a safe upper bound) keeps results exact."""
+    service, clock = _service(cache, max_batch=1, engine="esc")
+    m = _mat(seed=1)
+    key = svc.bucket_key(m, m)
+    service.submit(m, m, now=clock.advance(0.01))
+    cap = service._bucket_caps[key]
+    assert cap & (cap - 1) == 0
+    # simulate a heavier earlier flush: pin a larger cap, then reflush —
+    # the cap must never shrink back
+    service._bucket_caps[key] = cap * 4
+    service.submit(m, m, now=clock.advance(0.01))
+    assert service._bucket_caps[key] == cap * 4
+    want = np.asarray(sg.spgemm_scl_array(m, m).to_dense(), np.float64)
+    for r in service.completed:
+        np.testing.assert_allclose(
+            np.asarray(r.result.to_dense(), np.float64), want,
+            rtol=1e-4, atol=1e-4)
+
+
+def test_latencies_use_injected_clock(cache):
+    service, clock = _service(cache, max_batch=2)
+    m = _mat(seed=4)
+    r1 = service.submit(m, m, now=0.0)
+    clock.t = 5.0
+    r2 = service.submit(m, m, now=5.0)  # fills the bucket -> flush at t=5
+    assert r1.latency == pytest.approx(5.0)
+    assert r2.latency == pytest.approx(0.0)

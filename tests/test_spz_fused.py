@@ -17,7 +17,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import dispatch as dp
-from repro.core import spgemm as sg
+from repro.core import spgemm_engines as sg
 from repro.core import stream as kvstream
 from repro.core.formats import (EMPTY, batch_csr, csr_from_coo,
                                 random_sparse)
@@ -257,7 +257,7 @@ def test_feature_cache_hits_and_invalidations(monkeypatch):
 
 
 def test_feature_cache_bounded():
-    cache = dp._FeatureCache(maxsize=4)
+    cache = dp._OperandMemo(maxsize=4)
     for i in range(8):
         A = random_sparse(8, 8, 0.1, seed=i)
         cache.put(A, A, 16, {"i": i})

@@ -17,17 +17,23 @@ from repro.runtime.fault import FaultConfig, Preempted
 pytestmark = pytest.mark.slow
 
 
-def _run(arch, tmp_path, steps=12, preempt_hook=None, ckpt_every=4):
+def _run(arch, tmp_path, steps=12, preempt_hook=None, ckpt_every=4,
+         lr=1e-3):
     cfg = cb.get_smoke_config(arch)
-    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, decay_steps=steps)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=2, decay_steps=steps)
     fcfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
                        async_save=False)
+    # seed pinned explicitly: the loss-decrease assertions below are
+    # margin tests, and the slow lane must be deterministic
     return train(cfg, opt_cfg, fcfg, num_steps=steps, global_batch=4,
-                 seq_len=32, preempt_hook=preempt_hook, log_every=1000)
+                 seq_len=32, preempt_hook=preempt_hook, log_every=1000,
+                 seed=0)
 
 
 def test_train_loss_decreases(tmp_path):
-    _, hist = _run("tinyllama_1_1b", tmp_path, steps=25)
+    # 25 steps at lr=1e-3 was borderline on CPU (drop ~= the 0.1 margin);
+    # 40 steps at lr=3e-3 drops ~0.32 on the pinned seed — 3x the margin
+    _, hist = _run("tinyllama_1_1b", tmp_path, steps=40, lr=3e-3)
     losses = [h["loss"] for h in hist["steps"]]
     assert losses[-1] < losses[0] - 0.1, (losses[0], losses[-1])
 
