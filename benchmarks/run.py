@@ -77,14 +77,14 @@ def table3(mats, fast=False):
     # warm the host driver's chunk kernels once: their shapes are
     # matrix-independent by design (pow2 cap_s buckets), so this keeps
     # XLA compile time out of every matrix's host timing
-    sg.spgemm_spz(mats[0][1], mats[0][1], R=16, impl="xla", driver="host")
+    sg.spgemm_spz(mats[0][1], mats[0][1], R=16, backend="xla", driver="host")
     for name, A in mats:
         oracle = sg.spgemm_scl_array(A, A)
         t_host, (out_h, st_h) = _time_call(
-            lambda: sg.spgemm_spz(A, A, R=16, impl="xla", driver="host"))
-        sg.spgemm_spz(A, A, R=16, impl="xla", driver="fused")  # warm jits
+            lambda: sg.spgemm_spz(A, A, R=16, backend="xla", driver="host"))
+        sg.spgemm_spz(A, A, R=16, backend="xla", driver="fused")  # warm jits
         t_fused, (out_f, st_f) = _time_call(
-            lambda: sg.spgemm_spz(A, A, R=16, impl="xla", driver="fused"),
+            lambda: sg.spgemm_spz(A, A, R=16, backend="xla", driver="fused"),
             repeat=3)
         nnz = int(np.asarray(out_f.indptr)[-1])
         ident_host = (
@@ -124,14 +124,14 @@ def fig8(mats, fast=False):
             lambda: sg.spgemm_esc(A, A, cap), repeat=3)
         if not fast:
             res["spz"], _ = _time_call(
-                lambda: sg.spgemm_spz(A, A, R=16, impl="xla",
+                lambda: sg.spgemm_spz(A, A, R=16, backend="xla",
                                       driver="host")[0])
             res["spz-rsort"], _ = _time_call(
-                lambda: sg.spgemm_spz(A, A, R=16, rsort=True, impl="xla",
+                lambda: sg.spgemm_spz(A, A, R=16, rsort=True, backend="xla",
                                       driver="host")[0])
-            sg.spgemm_spz(A, A, R=16, impl="xla", driver="fused")  # warm
+            sg.spgemm_spz(A, A, R=16, backend="xla", driver="fused")  # warm
             res["spz-fused"], _ = _time_call(
-                lambda: sg.spgemm_spz(A, A, R=16, impl="xla",
+                lambda: sg.spgemm_spz(A, A, R=16, backend="xla",
                                       driver="fused")[0], repeat=3)
         base = res["scl-hash"]
         for impl, t in res.items():
@@ -149,7 +149,7 @@ def fig9(mats):
     for name, A in mats:
         for label, rsort in (("spz", False), ("spz-rsort", True)):
             # host driver: the only one with a per-phase wall-clock split
-            _, stats = sg.spgemm_spz(A, A, R=16, rsort=rsort, impl="xla",
+            _, stats = sg.spgemm_spz(A, A, R=16, rsort=rsort, backend="xla",
                                      driver="host")
             tot = (stats.t_preprocess + stats.t_expand + stats.t_sort +
                    stats.t_output) or 1e-9
@@ -172,7 +172,7 @@ def fig10(mats):
     for name, A in mats:
         work = int(sg.row_work(A, A).sum())
         esc_elems = 10 * work
-        _, st = sg.spgemm_spz(A, A, R=16, impl="xla", driver="host")
+        _, st = sg.spgemm_spz(A, A, R=16, backend="xla", driver="host")
         spz_elems = st.sort_elems + st.zip_elems
         _emit(f"fig10.{name}", 0.0,
               f"esc_elems={esc_elems}|spz_elems={spz_elems}|"
@@ -185,8 +185,8 @@ def fig11(mats):
     # counts scale with ceil(rows/S) x per-group iterations either way.
     print("# fig11: dynamic mssortk+mszipk instruction counts")
     for name, A in mats:
-        _, s0 = sg.spgemm_spz(A, A, R=16, S=64, impl="xla", driver="host")
-        _, s1 = sg.spgemm_spz(A, A, R=16, S=64, rsort=True, impl="xla",
+        _, s0 = sg.spgemm_spz(A, A, R=16, S=64, backend="xla", driver="host")
+        _, s1 = sg.spgemm_spz(A, A, R=16, S=64, rsort=True, backend="xla",
                               driver="host")
         _emit(f"fig11.{name}", 0.0,
               f"spz={s0.n_mssort + s0.n_mszip}|"
@@ -251,13 +251,13 @@ def kernels_bench():
     keys = jnp.asarray(rng.integers(0, 64, (S, R)).astype(np.int32))
     vals = jnp.asarray(rng.standard_normal((S, R)).astype(np.float32))
     lens = jnp.asarray(rng.integers(0, R, S).astype(np.int32))
-    for impl in ("xla", "pallas"):
+    for bk in ("xla", "pallas"):
         def fn():
             return ops.stream_sort(keys, vals, lens,
-                                   impl=impl)[0].block_until_ready()
+                                   backend=bk)[0].block_until_ready()
         fn()
         t, _ = _time_call(fn, repeat=3)
-        _emit(f"kernels.stream_sort.{impl}", t,
+        _emit(f"kernels.stream_sort.{bk}", t,
               f"streams={S}|R={R}|Melem_per_s={S * R / t / 1e6:.1f}")
 
 
@@ -294,11 +294,22 @@ def dispatch_bench(mats, fast=False):
     dp.spgemm(A, A, engine="esc")  # warm
     t, _ = _time_call(lambda: dp.spgemm(A, A, engine="esc"))
     _emit("dispatch.exec.esc", t, f"matrix={mats[0][0]}")
-    dp.spgemm(A, A, engine="spz-fused", R=16, impl="xla")  # warm
-    t, _ = _time_call(
-        lambda: dp.spgemm(A, A, engine="spz-fused", R=16, impl="xla"),
-        repeat=3)
-    _emit("dispatch.exec.spz-fused", t, f"matrix={mats[0][0]}")
+    # per-kernel-backend rows: the backend is a planned dimension, so the
+    # same engine runs under each registered on-device backend (off-TPU
+    # the pallas tier runs in interpret mode — labelled accordingly);
+    # the xla timing doubles as the legacy dispatch.exec.spz-fused row
+    import jax
+    for bk in ("xla", "pallas"):
+        label = bk if (bk != "pallas" or jax.default_backend() == "tpu") \
+            else "pallas-interpret"
+        dp.spgemm(A, A, engine="spz-fused", R=16, backend=bk)  # warm
+        t_bk, _ = _time_call(
+            lambda: dp.spgemm(A, A, engine="spz-fused", R=16, backend=bk),
+            repeat=1 if bk == "pallas" else 3)
+        if bk == "xla":
+            _emit("dispatch.exec.spz-fused", t_bk, f"matrix={mats[0][0]}")
+        _emit(f"dispatch.exec.spz-fused/{label}", t_bk,
+              f"matrix={mats[0][0]}|backend={bk}")
     # batched path: ragged request batch, one compilation across lanes
     lanes = [random_sparse(256, 256, d, seed=i)
              for i, d in enumerate((0.005, 0.01, 0.02, 0.04))]
@@ -320,12 +331,12 @@ def dispatch_bench(mats, fast=False):
     if not fast:
         t_z, _ = _time_call(
             lambda: dp.spgemm_batched(A, A, engine="spz-host", R=16,
-                                      impl="xla"))
+                                      backend="xla"))
         _emit("dispatch.batched.spz", t_z, f"lanes={len(lanes)}")
-        dp.spgemm_batched(A, A, engine="spz-fused", R=16, impl="xla")  # warm
+        dp.spgemm_batched(A, A, engine="spz-fused", R=16, backend="xla")  # warm
         t_zf, _ = _time_call(
             lambda: dp.spgemm_batched(A, A, engine="spz-fused", R=16,
-                                      impl="xla"), repeat=3)
+                                      backend="xla"), repeat=3)
         _emit("dispatch.batched.spz-fused", t_zf,
               f"lanes={len(lanes)}|speedup_vs_host={t_z / t_zf:.2f}")
 

@@ -16,7 +16,7 @@ keys = jnp.asarray(np.array([[5, 2, 5, 9], [7, 7, 7, 7],
                              [3, 1, 4, 1], [0, 0, 0, 0]], np.int32))
 vals = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
 lens = jnp.asarray(np.array([4, 4, 4, 2], np.int32))
-k, v, n = ops.stream_sort(keys, vals, lens, impl="pallas")
+k, v, n = ops.stream_sort(keys, vals, lens, backend="pallas")
 print("mssort  keys:", np.asarray(k))
 print("        vals:", np.asarray(v))
 print("        lens:", np.asarray(n), " (duplicates were accumulated)")
@@ -28,7 +28,7 @@ va = jnp.ones((1, 4), jnp.float32)
 vb = jnp.full((1, 4), 10.0, jnp.float32)
 l4 = jnp.asarray(np.array([4], np.int32))
 klo, vlo, khi, vhi, ca, cb, ol = ops.stream_merge(ka, va, l4, kb, vb, l4,
-                                                  impl="pallas")
+                                                  backend="pallas")
 print("\nmszip   merged:", np.asarray(klo)[0], "+", np.asarray(khi)[0])
 print("        consumed a,b:", int(ca[0]), int(cb[0]),
       "(the 100 waits for the next chunk — merge bit unset)")

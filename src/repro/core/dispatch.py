@@ -55,6 +55,12 @@ import jax.numpy as jnp
 from repro.core import spgemm as sg
 from repro.core.formats import (BatchedCSR, CSR, batch_csr, csr_from_coo,
                                 csr_to_numpy)
+from repro.kernels import backend as kb
+
+try:  # best-effort file locking for the autotune-cache flush
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platforms
+    fcntl = None
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +74,9 @@ class EngineSpec:
     ``fn(A, B, **kw)`` returns a CSR, or ``(CSR, stats)`` when
     ``returns_stats``. ``jittable`` engines lower to one XLA computation
     with static capacities; ``batchable`` engines additionally support the
-    single-compilation :func:`spgemm_batched` path."""
+    single-compilation :func:`spgemm_batched` path; ``backend_aware``
+    engines take a ``backend=`` kernel-backend kwarg (resolved once at
+    plan time from the registry in ``kernels/backend.py``)."""
 
     name: str
     fn: Callable
@@ -76,6 +84,7 @@ class EngineSpec:
     returns_stats: bool = False
     batchable: bool = False
     measure: bool = True  # candidate for autotune measurement
+    backend_aware: bool = False
     dtypes: tuple = ("float32",)
     description: str = ""
 
@@ -112,24 +121,28 @@ register_engine("esc", sg.spgemm_esc, jittable=True, batchable=True,
                 description="vectorized Expand-Sort-Compress (vec-radix)")
 register_engine("spz", lambda A, B, **kw: sg.spgemm_spz(A, B, **kw),
                 jittable=True, returns_stats=True, batchable=True,
+                backend_aware=True,
                 description="SparseZipper chunked stream sort + zip-merge "
                             "(device-resident fused driver by default)")
 register_engine("spz-fused",
                 lambda A, B, **kw: sg.spgemm_spz(A, B, driver="fused", **kw),
                 jittable=True, returns_stats=True, batchable=True,
                 measure=False,  # byte-identical to "spz": don't time it twice
+                backend_aware=True,
                 description="spz with the device-resident pipeline pinned: "
                             "expand/sort/zip-merge tree under one jit per "
                             "(N, L, R) bucket")
 register_engine("spz-host",
                 lambda A, B, **kw: sg.spgemm_spz(A, B, driver="host", **kw),
                 returns_stats=True, batchable=True, measure=False,
+                backend_aware=True,
                 description="spz with the lock-step host driver (one kernel "
                             "issue per chunk; stats-faithful Fig. 9-11 path; "
                             "never wins a measurement, so autotune skips it)")
 register_engine("spz-rsort",
                 lambda A, B, **kw: sg.spgemm_spz(A, B, rsort=True, **kw),
                 jittable=True, returns_stats=True, batchable=True,
+                backend_aware=True,
                 description="spz with rows pre-sorted by per-row work")
 
 
@@ -248,17 +261,24 @@ def _nnz_bucket(m: CSR) -> int:
     return int(np.asarray(m.indptr)[-1]).bit_length()
 
 
-def cache_key(A: CSR, B: CSR) -> str:
-    return (f"{A.n_rows}x{A.n_cols}@{_nnz_bucket(A)}"
-            f"*{B.n_rows}x{B.n_cols}@{_nnz_bucket(B)}")
+def cache_key(A: CSR, B: CSR, backend: Optional[str] = None) -> str:
+    """Shape/nnz bucket key, extended with the *requested* kernel backend
+    so an explicitly pinned backend autotunes its own bucket (a "pallas"
+    measurement must never serve an "xla" request, and vice versa).
+    ``"auto"`` requests keep the bare key — the default bucket, whose
+    entries may record the backend an autotune sweep picked."""
+    key = (f"{A.n_rows}x{A.n_cols}@{_nnz_bucket(A)}"
+           f"*{B.n_rows}x{B.n_cols}@{_nnz_bucket(B)}")
+    return key if backend in (None, "auto") else f"{key}|bk={backend}"
 
 
 class AutotuneCache:
-    """Disk-backed map cache_key -> {engine, source}.
+    """Disk-backed map cache_key -> {engine, source[, backend]}.
 
     ``source`` records how the entry was made: "heuristic" entries are
     upgraded in place by a later ``autotune=True`` call; "autotune" entries
-    are sticky. Default path: ``$REPRO_AUTOTUNE_CACHE`` or
+    are sticky.  ``backend`` (optional) records the winning kernel backend
+    for backend-aware engines.  Default path: ``$REPRO_AUTOTUNE_CACHE`` or
     ``~/.cache/repro/spgemm_autotune.json``.
 
     Robustness (shared by concurrent serving processes): a corrupt or
@@ -267,11 +287,12 @@ class AutotuneCache:
     are published with an atomic rename, so readers never observe a
     partial file; and every flush re-reads and merges the current
     on-disk entries (an "autotune" entry from another process is never
-    downgraded by this process's "heuristic" one).  The merge is
-    best-effort — there is no file lock, so two *simultaneous* flushes
-    can still race between read and rename — but it shrinks the loss
-    window from "entire process lifetime" to that one flush, and a
-    dropped entry only costs a re-measurement, never correctness."""
+    downgraded by this process's "heuristic" one) under a best-effort
+    ``fcntl`` file lock (``<path>.lock``) that serializes the
+    read-merge-write critical section across processes — on platforms
+    without ``fcntl`` the lock is a no-op and the merge falls back to
+    the previous shrunk-loss-window behaviour, where a dropped entry
+    only costs a re-measurement, never correctness."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or os.environ.get(
@@ -312,16 +333,38 @@ class AutotuneCache:
     def get(self, key: str) -> Optional[dict]:
         return self._load().get(key)
 
-    def put(self, key: str, engine: str, source: str) -> None:
-        self._load()[key] = {"engine": engine, "source": source}
+    def put(self, key: str, engine: str, source: str,
+            backend: Optional[str] = None) -> None:
+        entry = {"engine": engine, "source": source}
+        if backend is not None:
+            entry["backend"] = backend
+        self._load()[key] = entry
         if source == "autotune":
             self.version += 1
         self._flush()
 
+    def _lock_file(self):
+        """Open + exclusively lock ``<path>.lock``; None when unavailable.
+
+        flock serializes the flush's read-merge-write across processes
+        (and across cache objects in one process — each open is its own
+        file description).  Purely best-effort: any failure degrades to
+        the unlocked merge, never to a failed multiply."""
+        if fcntl is None:
+            return None
+        try:
+            f = open(self.path + ".lock", "a")
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            return f
+        except OSError:
+            return None
+
     def _flush(self) -> None:
         tmp = None
+        lock = None
         try:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            lock = self._lock_file()
             # read-merge-write: keep entries concurrent processes flushed
             # since we loaded; their measured plans beat our heuristics
             disk = self._read_disk() or {}
@@ -341,6 +384,13 @@ class AutotuneCache:
             if tmp is not None:
                 try:
                     os.unlink(tmp)
+                except OSError:
+                    pass
+        finally:
+            if lock is not None:
+                try:
+                    fcntl.flock(lock.fileno(), fcntl.LOCK_UN)
+                    lock.close()
                 except OSError:
                     pass
 
@@ -367,16 +417,40 @@ def default_cache() -> AutotuneCache:
     return _default_cache
 
 
-def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1) -> float:
+def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1,
+             backend: Optional[str] = None) -> float:
+    kw = {"backend": backend} if backend is not None else {}
     best = math.inf
     for _ in range(repeat):
         t0 = time.perf_counter()
-        out = spec.fn(A, B)
+        out = spec.fn(A, B, **kw)
         if spec.returns_stats:
             out = out[0]
         jax.block_until_ready(out.data)
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _measure_candidates(backend: str) -> list[tuple[str, Optional[str]]]:
+    """(engine, backend) pairs autotune times.  With ``backend="auto"``
+    the backend becomes part of the search space: every backend-aware
+    engine is measured once per kernel backend measurable on this host
+    (``kb.measurable_backends()`` — off-TPU that excludes the
+    interpret-mode pallas tier), so a TPU shape bucket can settle on
+    e.g. ``spz-fused/pallas`` over ``spz-fused/xla``.  A pinned backend
+    is measured as-is."""
+    cands: list[tuple[str, Optional[str]]] = []
+    for name, spec in _REGISTRY.items():
+        if not spec.measure:
+            continue
+        if not spec.backend_aware:
+            cands.append((name, None))
+        elif backend == "auto":
+            cands.extend((name, bk.name)
+                         for bk in kb.measurable_backends())
+        else:
+            cands.append((name, kb.resolve_backend(backend).name))
+    return cands
 
 
 # ---------------------------------------------------------------------------
@@ -423,6 +497,7 @@ class ExecutionPlan:
     source: str                 # "explicit" | "heuristic" | "cache" | "autotune"
     rule: Optional[str] = None  # heuristic rule that fired (source="heuristic")
     batch: Optional[int] = None  # lane capacity (batched plans only)
+    backend: Optional[str] = None  # resolved kernel backend (aware engines)
 
     @property
     def kwargs_dict(self) -> dict:
@@ -431,16 +506,57 @@ class ExecutionPlan:
     @property
     def jit_key(self) -> tuple:
         """Static identity of the compiled computation this plan routes
-        to: engine + operand structure + resolved static capacities."""
-        return (self.engine, self.batched, self.batch, self.a_shape,
-                self.b_shape, self.work_bucket, self.kwargs)
+        to: engine + kernel backend + operand structure + resolved
+        static capacities."""
+        return (self.engine, self.backend, self.batched, self.batch,
+                self.a_shape, self.b_shape, self.work_bucket, self.kwargs)
 
 
 def _sorted_kwargs(kw: dict) -> tuple:
     return tuple(sorted(kw.items()))
 
 
+def _resolve_plan_backend(spec: EngineSpec, backend: str,
+                          cached: Optional[str], kw: dict, *,
+                          strict: bool = True) -> tuple[Optional[str], dict]:
+    """Fold the kernel backend into an engine's plan-time kwargs.
+
+    Backend-aware engines get ``kwargs["backend"] = <resolved name>``
+    (cache/autotune outcome beats the "auto" default; an explicit pin
+    always wins); other engines carry no backend.  Requesting a pinned
+    backend for an explicitly named engine that cannot use one is a
+    planning error; under auto selection (``strict=False``) the pin is
+    simply irrelevant to a non-aware winner and is dropped.
+
+    A ``cached`` backend name comes from the shared on-disk cache and is
+    NOT trusted blindly: an unknown name (version skew, hand-edited
+    file) or one that only performs on TPU (an entry recorded on a TPU
+    host, replayed on a CPU serving host, would otherwise route every
+    multiply through Pallas interpret mode) falls back to the "auto"
+    default — a cache hit must never raise or degrade execution."""
+    if not spec.backend_aware:
+        if backend != "auto" and strict:
+            raise ValueError(
+                f"engine {spec.name!r} does not take a kernel backend "
+                f"(requested {backend!r})")
+        return None, kw
+    name = None
+    if backend == "auto" and cached is not None:
+        try:
+            bk_c = kb.resolve_backend(cached)
+            if kb.on_tpu() or not bk_c.needs_tpu_for_perf:
+                name = bk_c.name
+        except ValueError:
+            pass
+    if name is None:
+        name = kb.resolve_backend(backend).name
+    kw = dict(kw)
+    kw["backend"] = name
+    return name, kw
+
+
 def plan(A: CSR, B: CSR, engine: str = "auto", *,
+         backend: str = "auto",
          autotune: bool = False,
          cache: Optional[AutotuneCache] = None,
          rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
@@ -449,7 +565,16 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
 
     engine:  a registered name, or "auto" to select by cached plan /
              heuristic features / measurement.
-    autotune: with engine="auto", time every registered engine on this
+    backend: kernel-backend request for the stream primitives — a name
+             registered in ``kernels/backend.py`` ("xla", "pallas",
+             "ref") or "auto".  Resolved HERE, once: the chosen backend
+             rides in the plan's kwargs/``jit_key`` and suffixes the
+             autotune-cache key, so a pinned backend autotunes its own
+             bucket and with "auto" the backend joins the autotune
+             search space (e.g. ``spz-fused/xla`` vs
+             ``spz-fused/pallas`` per shape bucket).
+    autotune: with engine="auto", time every registered engine (and, for
+             backend-aware engines, every measurable backend) on this
              input once and cache the winner for the shape/nnz bucket.
     cache:   AutotuneCache override (default: process-wide disk cache).
              Non-default ``rules`` bypass the cache entirely — a cached
@@ -460,29 +585,34 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
     are memoized on operand identity and skip selection entirely."""
     if A.n_cols != B.n_rows:
         raise ValueError(f"inner dims differ: {A.shape} @ {B.shape}")
+    kb.resolve_backend(backend)  # validate the request up front
     use_cache = rules is DEFAULT_HEURISTICS
     if cache is None:  # NB: `or` would drop an *empty* caller cache
         cache = default_cache()
     memo_extra = None
     if engine == "auto" and use_cache and cache is default_cache():
         try:
-            memo_extra = ("plan", autotune, cache.version, _sorted_kwargs(kw))
+            memo_extra = ("plan", backend, autotune, cache.version,
+                          _sorted_kwargs(kw))
             hit = _plan_memo.get(A, B, memo_extra)
             if hit is not None:
                 return hit
         except TypeError:  # unhashable kwarg value: skip the memo
             memo_extra = None
-    key = cache_key(A, B)
-    selected, source, rule = engine, "explicit", None
+    key = cache_key(A, B, backend=backend)
+    selected, source, rule, sel_bk = engine, "explicit", None, None
     if engine == "auto":
         hit = cache.get(key) if use_cache else None
         if hit is not None and (hit["source"] == "autotune" or not autotune):
             selected, source = hit["engine"], "cache"
+            sel_bk = hit.get("backend")
         elif autotune:
-            timings = {name: _measure(spec, A, B)
-                       for name, spec in _REGISTRY.items() if spec.measure}
-            selected, source = min(timings, key=timings.get), "autotune"
-            cache.put(key, selected, "autotune")
+            timings = {(name, bk_name): _measure(get_engine(name), A, B,
+                                                 backend=bk_name)
+                       for name, bk_name in _measure_candidates(backend)}
+            (selected, sel_bk), source = \
+                min(timings, key=timings.get), "autotune"
+            cache.put(key, selected, "autotune", backend=sel_bk)
         else:
             selected, rule = choose_engine(extract_features(A, B), rules)
             source = "heuristic"
@@ -490,11 +620,15 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
                 cache.put(key, selected, "heuristic")
     spec = get_engine(selected)
     resolved = _filter_kwargs(spec.fn, kw) if engine == "auto" else kw
+    plan_bk, resolved = _resolve_plan_backend(spec, backend, sel_bk,
+                                              resolved,
+                                              strict=engine != "auto")
     p = ExecutionPlan(engine=selected, batched=False,
                       a_shape=A.shape, b_shape=B.shape,
                       kwargs=_sorted_kwargs(resolved),
                       work_bucket=(_nnz_bucket(A), _nnz_bucket(B)),
-                      cache_key=key, source=source, rule=rule)
+                      cache_key=key, source=source, rule=rule,
+                      backend=plan_bk)
     if memo_extra is not None:
         _plan_memo.put(A, B, memo_extra, p)
     return p
@@ -522,6 +656,7 @@ def execute(p: ExecutionPlan, A: CSR, B: CSR, *,
 
 
 def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
+           backend: str = "auto",
            autotune: bool = False,
            cache: Optional[AutotuneCache] = None,
            rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
@@ -530,8 +665,10 @@ def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
     """Multiply two padded CSR matrices through the engine registry.
 
     Exactly ``execute(plan(A, B, ...), A, B)`` — see :func:`plan` for
-    the selection knobs and :func:`execute` for the run semantics."""
-    p = plan(A, B, engine, autotune=autotune, cache=cache, rules=rules, **kw)
+    the selection knobs (including the plan-time kernel-backend
+    resolution) and :func:`execute` for the run semantics."""
+    p = plan(A, B, engine, backend=backend, autotune=autotune, cache=cache,
+             rules=rules, **kw)
     return execute(p, A, B, return_stats=return_stats)
 
 
@@ -552,7 +689,7 @@ def explain(A: CSR, B: CSR,
 # vmapped unjitted ESC core, jitted once over the whole batch: every lane
 # shares the static (cap_products, n_rows, n_cols) plan.
 _esc_batched_core = jax.jit(
-    jax.vmap(sg._esc_core_impl,
+    jax.vmap(sg.esc_core_impl,
              in_axes=(0, 0, 0, 0, 0, 0, None, None, None)),
     static_argnums=(6, 7, 8))
 
@@ -580,7 +717,7 @@ def _esc_batched(A: BatchedCSR, B: BatchedCSR,
 
 def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
                  S: Optional[int] = None, rsort: bool = False,
-                 impl: str = "auto", driver: str = "fused") -> list:
+                 backend="auto", driver: str = "fused") -> list:
     """Batched SparseZipper driver: rows from *every* valid lane are packed
     into shared lock-step groups of S streams.  The default "fused" driver
     feeds each group through the device-resident expand/sort/merge-tree
@@ -590,6 +727,7 @@ def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
     S = S or 32 * R
     if driver not in ("fused", "host"):
         raise ValueError(f"unknown spz driver {driver!r}; use 'fused'|'host'")
+    bk = kb.resolve_backend(backend)  # unknown names raise, listing all
     stats = sg.SpzStats()
     lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
     valid_lanes = [i for i in range(A.batch) if lane_ok[i]]
@@ -610,8 +748,8 @@ def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
         for g0 in range(0, len(items), S):
             group = items[g0:g0 + S]
             plens = np.array([work[ln][r] for ln, r in group], np.int64)
-            sg._fused_process_group(group, plens, mats, R, impl, stats,
-                                    out_k, out_v)
+            sg.fused_process_group(group, plens, mats, R, bk, stats,
+                                   out_k, out_v)
     else:
         for g0 in range(0, len(items), S):
             group = items[g0:g0 + S]
@@ -619,11 +757,11 @@ def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
             for lane, row in group:
                 (a_indptr, a_idx, a_val), (b_indptr, b_idx, b_val) = \
                     lanes[lane]
-                products.extend(sg._expand_group(
+                products.extend(sg.expand_group(
                     [row], a_indptr, a_idx, a_val, b_indptr, b_idx, b_val))
-            parts = sg._sort_phase(products, R, len(group), impl, stats,
-                                   cap_s=S)
-            final = sg._merge_tree(parts, R, impl, stats, cap_s=S)
+            parts = sg.sort_phase(products, R, len(group), bk, stats,
+                                  cap_s=S)
+            final = sg.merge_tree_host(parts, R, bk, stats, cap_s=S)
             if final is not None:
                 Kf, Vf, lf = final
                 for s, it in enumerate(group):
@@ -671,7 +809,7 @@ def get_batch_driver(name: str) -> Callable:
         raise ValueError(f"engine {name!r} has no batched driver") from None
 
 
-def _check_batch(A: BatchedCSR, B: BatchedCSR) -> np.ndarray:
+def check_batch(A: BatchedCSR, B: BatchedCSR) -> np.ndarray:
     if A.batch != B.batch or A.n_cols != B.n_rows:
         raise ValueError(f"batch mismatch: {A.batch}x{A.shape} @ "
                          f"{B.batch}x{B.shape}")
@@ -682,6 +820,7 @@ def _check_batch(A: BatchedCSR, B: BatchedCSR) -> np.ndarray:
 
 
 def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
+                 backend: str = "auto",
                  cache: Optional[AutotuneCache] = None,
                  rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
                  lane_work_hint: Optional[Sequence[int]] = None,
@@ -695,14 +834,19 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
     shared product capacity (esc) or stream geometry (spz) so identical
     request structures reuse one compilation.
 
+    backend: kernel-backend request, resolved at plan time exactly like
+    the single-pair :func:`plan` (the spz batch drivers are
+    backend-aware; the cache key carries the request).
+
     lane_work_hint: per-lane total row_work, if the caller already
     computed it (the sharding layer does, for lane balancing) — skips
     the recompute when sizing the esc product capacity."""
-    _check_batch(A, B)
+    check_batch(A, B)
+    kb.resolve_backend(backend)  # validate the request up front
     i_heavy = max((i for i, _ in A.lanes()),
                   key=lambda i: int(np.asarray(A[i].indptr)[-1]))
-    key = cache_key(A[i_heavy], B[i_heavy])
-    selected, source, rule = engine, "explicit", None
+    key = cache_key(A[i_heavy], B[i_heavy], backend=backend)
+    selected, source, rule, sel_bk = engine, "explicit", None, None
     if engine == "auto":
         use_cache = rules is DEFAULT_HEURISTICS
         if cache is None:
@@ -710,6 +854,7 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
         hit = cache.get(key) if use_cache else None
         if hit is not None:
             selected, source = hit["engine"], "cache"
+            sel_bk = hit.get("backend")
         else:
             selected, rule = choose_engine(
                 extract_features(A[i_heavy], B[i_heavy]), rules)
@@ -732,15 +877,18 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
                  if lane_work_hint is not None else
                  [int(sg.row_work(a, B[i]).sum()) for i, a in A.lanes()])
         kw["cap_products"] = _pow2_at_least(max(works + [1]))
+    plan_bk, kw = _resolve_plan_backend(spec, backend, sel_bk, kw,
+                                        strict=engine != "auto")
     return ExecutionPlan(engine=remapped, batched=True, batch=A.batch,
                          a_shape=A.shape, b_shape=B.shape,
                          kwargs=_sorted_kwargs(kw),
                          work_bucket=(_nnz_bucket(A[i_heavy]),
                                       _nnz_bucket(B[i_heavy])),
-                         cache_key=key, source=source, rule=rule)
+                         cache_key=key, source=source, rule=rule,
+                         backend=plan_bk)
 
 
-def _assemble_batched(outs: list, A: BatchedCSR, B: BatchedCSR) -> BatchedCSR:
+def assemble_batched(outs: list, A: BatchedCSR, B: BatchedCSR) -> BatchedCSR:
     """Stack per-lane results (None = invalid lane) into the output
     BatchedCSR whose lane capacity is the max output nnz."""
     empty = csr_from_coo([], [], [], (A.n_rows, B.n_cols))
@@ -759,13 +907,13 @@ def execute_batched(p: ExecutionPlan, A: BatchedCSR,
     if not p.batched:
         raise ValueError("single-pair plan passed to execute_batched(); "
                          "use execute()")
-    _check_batch(A, B)
+    check_batch(A, B)
     if A.shape != p.a_shape or B.shape != p.b_shape or A.batch != p.batch:
         raise ValueError(
             f"plan/operand mismatch: planned {p.batch}x{p.a_shape} @ "
             f"{p.b_shape}, got {A.batch}x{A.shape} @ {B.shape}")
     outs = _BATCH_DRIVERS[p.engine](A, B, **p.kwargs_dict)
-    return _assemble_batched(outs, A, B)
+    return assemble_batched(outs, A, B)
 
 
 def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import CSR, EMPTY, csr_from_coo, csr_to_numpy, row_ids_from_indptr
 from repro.core import stream as kvstream
-from repro.kernels import ops
+from repro.kernels import backend as kb
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +136,7 @@ def spgemm_scl_hash(A: CSR, B: CSR) -> CSR:
 # ESC (vec-radix analogue) — fully jittable with static capacities
 # ---------------------------------------------------------------------------
 
-def _esc_core_impl(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
+def esc_core_impl(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
                    cap_products: int, n_rows: int, n_cols: int):
     nnz_a_cap = a_idx.shape[0]
     # --- expansion: product p belongs to A-entry t = searchsorted(Wcum, p)
@@ -176,10 +176,10 @@ def _esc_core_impl(a_indptr, a_idx, a_val, b_indptr, b_idx, b_val,
     return out_r, out_c, out_v, valid_out, n_out
 
 
-# jitted single-matrix entry; the unjitted _esc_core_impl is vmapped by the
+# jitted single-matrix entry; the unjitted esc_core_impl is vmapped by the
 # batched dispatch path (core/dispatch.py) so a whole batch shares one jit
 _esc_core = functools.partial(
-    jax.jit, static_argnames=("cap_products", "n_rows", "n_cols"))(_esc_core_impl)
+    jax.jit, static_argnames=("cap_products", "n_rows", "n_cols"))(esc_core_impl)
 
 
 def spgemm_esc(A: CSR, B: CSR, cap_products: int | None = None) -> CSR:
@@ -213,7 +213,7 @@ class SpzStats:
     t_output: float = 0.0      # output generation / row reordering
 
 
-def _expand_group(rows, a_indptr, a_idx, a_val, b_indptr, b_idx, b_val):
+def expand_group(rows, a_indptr, a_idx, a_val, b_indptr, b_idx, b_val):
     """Vectorized expansion (RVV phase in the paper) for a group of rows.
     Returns per-row (cols, vals) numpy arrays of partial products."""
     out = []
@@ -238,7 +238,7 @@ def _expand_group(rows, a_indptr, a_idx, a_val, b_indptr, b_idx, b_val):
     return out
 
 
-def _sort_phase(products, R, S, impl, stats: SpzStats, cap_s=None):
+def sort_phase(products, R, S, backend, stats: SpzStats, cap_s=None):
     """Chunk-sort every stream's products into sorted unique partitions.
 
     Returns a list of partitions; partition p = (keys (S, R), vals (S, R),
@@ -260,7 +260,7 @@ def _sort_phase(products, R, S, impl, stats: SpzStats, cap_s=None):
             break
         keys = K[:, c * R:(c + 1) * R]
         vals = V[:, c * R:(c + 1) * R]
-        ok, ov, ol = kvstream.sort_chunks(keys, vals, lens, impl=impl,
+        ok, ov, ol = kvstream.sort_chunks(keys, vals, lens, backend=backend,
                                           cap_s=cap_s)
         stats.n_mssort += 1
         stats.sort_elems += int(lens.sum())
@@ -295,7 +295,7 @@ def _put_rows(K, V, optr, src_k, src_v, n):
     V[rows, idx[ok]] = src_v[ok]
 
 
-def _merge_round(A, B, R, impl, stats: SpzStats, cap_s=None):
+def merge_round(A, B, R, backend, stats: SpzStats, cap_s=None):
     """Merge partition pair lock-step across streams, chunk by chunk.
     A, B: (keys (S, La), vals, lens (S,)) padded partitions.
     Returns merged (keys (S, La+Lb), vals, lens)."""
@@ -314,8 +314,8 @@ def _merge_round(A, B, R, impl, stats: SpzStats, cap_s=None):
         if not both.any():
             break
         ka, va, la = _take_chunk(Ka, Va, np.where(both, lensA, 0), pa, R)
-        kb, vb, lb = _take_chunk(Kb, Vb, np.where(both, lensB, 0), pb, R)
-        res = kvstream.merge_chunks(ka, va, la, kb, vb, lb, impl=impl,
+        kb_, vb, lb = _take_chunk(Kb, Vb, np.where(both, lensB, 0), pb, R)
+        res = kvstream.merge_chunks(ka, va, la, kb_, vb, lb, backend=backend,
                                     cap_s=cap_s)
         klo, vlo, khi, vhi, ca, cb, ol = map(np.asarray, res)
         stats.n_mszip += 1
@@ -345,14 +345,14 @@ def _merge_round(A, B, R, impl, stats: SpzStats, cap_s=None):
     return Ko, Vo, optr.astype(np.int64)
 
 
-def _merge_tree(parts, R, impl, stats: SpzStats, cap_s=None):
+def merge_tree_host(parts, R, backend, stats: SpzStats, cap_s=None):
     """Zip-merge tree: halve partition count per round, lock-step.
     Returns the single surviving partition (keys, vals, lens) or None."""
     while len(parts) > 1:
         nxt = []
         for j in range(0, len(parts) - 1, 2):
-            nxt.append(_merge_round(parts[j], parts[j + 1], R, impl, stats,
-                                    cap_s=cap_s))
+            nxt.append(merge_round(parts[j], parts[j + 1], R, backend,
+                                    stats, cap_s=cap_s))
         if len(parts) % 2:
             nxt.append(parts[-1])
         parts = nxt
@@ -371,7 +371,7 @@ def _fused_expand(row_ids, lane_ids, a_indptr, a_idx, a_val,
     ``row_ids[s]`` of batch lane ``lane_ids[s]`` (row_ids < 0 marks
     padding streams).  Matrix arrays are (batch, ...) stacked.  Returns
     (keys (S, L), vals (S, L), plens (S,)) with EMPTY/0 padding — the
-    device replacement for the host ``_expand_group`` + chunk-buffer
+    device replacement for the host ``expand_group`` + chunk-buffer
     marshaling.
     """
     Bn, n_rows1 = a_indptr.shape
@@ -415,7 +415,8 @@ def _fused_expand(row_ids, lane_ids, a_indptr, a_idx, a_val,
 
 
 def _fused_bucket_impl(row_ids, lane_ids, a_indptr, a_idx, a_val,
-                       b_indptr, b_idx, b_val, R: int, L: int, impl: str):
+                       b_indptr, b_idx, b_val, R: int, L: int,
+                       backend: str):
     """One work bucket of a lock-step group, fully device-resident:
     expansion, chunk sort, and the whole zip-merge tree chained under a
     single trace.  Returns (keys (N, L), vals, lens (N,), rounds) where
@@ -424,13 +425,12 @@ def _fused_bucket_impl(row_ids, lane_ids, a_indptr, a_idx, a_val,
     keys, vals, plens = _fused_expand(row_ids, lane_ids, a_indptr, a_idx,
                                       a_val, b_indptr, b_idx, b_val, L)
     return kvstream.fused_sort_merge(keys, vals, plens, R=R,
-                                     sort_fn=ops._sort_chunk_fn(impl),
-                                     detailed=True)
+                                     backend=backend, detailed=True)
 
 
 # one compiled pipeline per static (N, L, R) bucket + matrix capacity
 _fused_bucket = functools.partial(
-    jax.jit, static_argnames=("R", "L", "impl"))(_fused_bucket_impl)
+    jax.jit, static_argnames=("R", "L", "backend"))(_fused_bucket_impl)
 
 
 def _pow2_chunks(max_plen: int, R: int) -> int:
@@ -439,7 +439,7 @@ def _pow2_chunks(max_plen: int, R: int) -> int:
     return 1 << max(0, q - 1).bit_length()
 
 
-def _fused_process_group(items, plens, mats, R, impl, stats: SpzStats,
+def fused_process_group(items, plens, mats, R, backend, stats: SpzStats,
                          out_k: dict | None = None,
                          out_v: dict | None = None,
                          coo: list | None = None) -> None:
@@ -496,7 +496,7 @@ def _fused_process_group(items, plens, mats, R, impl, stats: SpzStats,
             lane_ids[t], row_ids[t] = items[ix]
         mk, mv, ml, rounds = _fused_bucket(
             jnp.asarray(row_ids), jnp.asarray(lane_ids), *mats,
-            R=R, L=C_b * R, impl=impl)
+            R=R, L=C_b * R, backend=kb.resolve_backend(backend).name)
         mk, mv, ml = np.asarray(mk), np.asarray(mv), np.asarray(ml)
         for k, (st, ze, tl) in enumerate(rounds):
             st, tl = np.asarray(st), np.asarray(tl)
@@ -527,7 +527,7 @@ def _group_cap(Sg: int, S: int) -> int:
     return min(S, 1 << max(0, Sg - 1).bit_length())
 
 
-def _spz_host_driver(A, B, R, S, order, impl, stats):
+def _spz_host_driver(A, B, R, S, order, backend, stats):
     """The paper-faithful lock-step Python driver: one kernel issue per
     chunk, numpy marshaling between issues (stats carry the per-phase
     wall-clock breakdown used by the Fig. 9 benchmark)."""
@@ -539,12 +539,13 @@ def _spz_host_driver(A, B, R, S, order, impl, stats):
         rows = order[g0:g0 + S]
         cap_g = _group_cap(len(rows), S)
         t1 = time.perf_counter()
-        products = _expand_group(rows, a_indptr, a_idx, a_val,
+        products = expand_group(rows, a_indptr, a_idx, a_val,
                                  b_indptr, b_idx, b_val)
         t2 = time.perf_counter()
         stats.t_expand += t2 - t1
-        parts = _sort_phase(products, R, len(rows), impl, stats, cap_s=cap_g)
-        final = _merge_tree(parts, R, impl, stats, cap_s=cap_g)
+        parts = sort_phase(products, R, len(rows), backend, stats,
+                           cap_s=cap_g)
+        final = merge_tree_host(parts, R, backend, stats, cap_s=cap_g)
         stats.t_sort += time.perf_counter() - t2
         if final is not None:
             Kf, Vf, lf = final
@@ -558,7 +559,7 @@ def _spz_host_driver(A, B, R, S, order, impl, stats):
     return out_rows_k, out_rows_v
 
 
-def _spz_fused_driver(A, B, R, S, order, work, impl, stats):
+def _spz_fused_driver(A, B, R, S, order, work, backend, stats):
     """Device-resident driver: per lock-step group, the work-bucketed
     expand/sort/merge-tree pipelines run as jitted computations keyed on
     static (N, L, R) buckets.  All chunk pointers live on the device;
@@ -571,8 +572,8 @@ def _spz_fused_driver(A, B, R, S, order, work, impl, stats):
         rows = order[g0:g0 + S]
         items = [(0, int(i)) for i in rows]
         t1 = time.perf_counter()
-        _fused_process_group(items, work[rows], mats, R, impl, stats,
-                             coo=coo)
+        fused_process_group(items, work[rows], mats, R, backend, stats,
+                            coo=coo)
         stats.t_sort += time.perf_counter() - t1
     return coo
 
@@ -604,7 +605,7 @@ def _rows_to_csr(out_rows_k, out_rows_v, shape) -> CSR:
 
 
 def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
-               rsort: bool = False, impl: str = "auto",
+               rsort: bool = False, backend="auto",
                driver: str = "fused"):
     """Merge-based SpGEMM using the SparseZipper primitives.
 
@@ -613,6 +614,12 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
        dispatch is allowed — stream semantics are independent — and models a
        multi-issue matrix unit; default 32*R).
     rsort: pre-sort row indices by per-row work (spz-rsort).
+    backend: kernel backend for the stream primitives — a registered name
+       ("xla", "pallas", "ref"), "auto" (pallas on TPU, xla elsewhere),
+       or a resolved ``KernelBackend``; unknown names raise ``ValueError``
+       listing the registered backends.  All registered backends are
+       bit-compatible, so this is purely a performance knob (the dispatch
+       layer resolves it once at plan time).
     driver: "fused" (default) — device-resident pipeline: expansion, chunk
        sort, and the whole zip-merge tree run as ONE jitted computation
        per (S, L, R) bucket, with the data-dependent chunk advancement
@@ -625,6 +632,7 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
     stats = SpzStats()
     if driver not in ("fused", "host"):
         raise ValueError(f"unknown spz driver {driver!r}; use 'fused'|'host'")
+    bk = kb.resolve_backend(backend)  # unknown names raise, listing all
     if A.n_rows == 0:
         # zero output rows: concatenating per-row results would raise
         return csr_from_coo([], [], [], (A.n_rows, B.n_cols)), stats
@@ -634,12 +642,12 @@ def spgemm_spz(A: CSR, B: CSR, *, R: int = 16, S: int | None = None,
              else np.arange(A.n_rows))
     stats.t_preprocess = time.perf_counter() - t0
     if driver == "host":
-        out_rows_k, out_rows_v = _spz_host_driver(A, B, R, S, order, impl,
+        out_rows_k, out_rows_v = _spz_host_driver(A, B, R, S, order, bk,
                                                   stats)
         t3 = time.perf_counter()
         out = _rows_to_csr(out_rows_k, out_rows_v, (A.n_rows, B.n_cols))
     else:
-        coo = _spz_fused_driver(A, B, R, S, order, work, impl, stats)
+        coo = _spz_fused_driver(A, B, R, S, order, work, bk, stats)
         t3 = time.perf_counter()
         out = _coo_parts_to_csr(coo, (A.n_rows, B.n_cols))
     stats.t_output = time.perf_counter() - t3

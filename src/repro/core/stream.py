@@ -27,42 +27,46 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.formats import EMPTY
-from repro.kernels import merge_tree, ops, ref
+from repro.kernels import backend as kb
+from repro.kernels import merge_tree, ops
 
 
-def sort_chunks(keys, vals, lens, *, impl="auto", cap_s=None):
+def sort_chunks(keys, vals, lens, *, backend="auto", cap_s=None):
     """mssortk+mssortv over S lock-step streams."""
     return ops.stream_sort(jnp.asarray(keys), jnp.asarray(vals),
-                           jnp.asarray(lens), impl=impl, cap_s=cap_s)
+                           jnp.asarray(lens), backend=backend, cap_s=cap_s)
 
 
-def merge_chunks(ka, va, la, kb, vb, lb, *, impl="auto", cap_s=None):
+def merge_chunks(ka, va, la, kb_, vb, lb, *, backend="auto", cap_s=None):
     """mszipk+mszipv over S lock-step streams."""
     return ops.stream_merge(jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
-                            jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
-                            impl=impl, cap_s=cap_s)
+                            jnp.asarray(kb_), jnp.asarray(vb),
+                            jnp.asarray(lb), backend=backend, cap_s=cap_s)
 
 
-def merge_partitions(ka, va, la, kb, vb, lb, *, R=16, pair_streams=None,
-                     with_counters=True):
+def merge_partitions(ka, va, la, kb_, vb, lb, *, R=16, pair_streams=None,
+                     with_counters=True, backend="auto"):
     """Device-resident full merge of two padded (N, L) partitions: the
     lock-step chunk advancement (pointers, copy-through tails) runs under
     one ``jax.lax.while_loop`` instead of a host loop of mszip issues.
     Returns (keys, vals, lens, MergeCounters)."""
     return ops.merge_partitions(jnp.asarray(ka), jnp.asarray(va),
-                                jnp.asarray(la), jnp.asarray(kb),
+                                jnp.asarray(la), jnp.asarray(kb_),
                                 jnp.asarray(vb), jnp.asarray(lb),
                                 R=R, pair_streams=pair_streams,
-                                with_counters=with_counters)
+                                with_counters=with_counters, backend=backend)
 
 
-def chunk_sort_partitions(keys, vals, plens, *, R, sort_fn=ref.stream_sort_ref):
+def chunk_sort_partitions(keys, vals, plens, *, R, backend="auto"):
     """Chunk-sort (S, L) padded streams into (S, C, R) sorted partitions.
 
-    Traceable device replacement for the host ``_sort_phase``: all S*C
-    R-chunks are sorted in ONE kernel issue, but the returned counters
-    keep the host accounting (one mssort per chunk column that holds any
-    data — ceil(max plens / R) issues, each a load + store).
+    Traceable device replacement for the host ``sort_phase``: all S*C
+    R-chunks are sorted in ONE kernel issue — the registry backend's
+    ``chunk_sort`` primitive (scatter-free linear sort on ``xla``, the
+    native Pallas chunk-sort kernel on ``pallas``; bit-identical) — but
+    the returned counters keep the host accounting (one mssort per chunk
+    column that holds any data — ceil(max plens / R) issues, each a load
+    + store).
 
     Returns (keys (S, C, R), vals, lens (S, C), n_mssort, sort_elems).
     """
@@ -73,26 +77,29 @@ def chunk_sort_partitions(keys, vals, plens, *, R, sort_fn=ref.stream_sort_ref):
     chunk_lens = jnp.clip(plens[:, None]
                           - jnp.arange(C, dtype=jnp.int32)[None, :] * R,
                           0, R).reshape(S * C)
-    sk, sv, sl = sort_fn(keys.reshape(S * C, R), vals.reshape(S * C, R),
-                         chunk_lens)
+    bk = kb.resolve_backend(backend)
+    sk, sv, sl = bk.chunk_sort(keys.reshape(S * C, R),
+                               vals.reshape(S * C, R), chunk_lens)
     n_mssort = -(-jnp.max(plens) // R)
     sort_elems = jnp.sum(plens, dtype=jnp.int32)
     return (sk.reshape(S, C, R), sv.reshape(S, C, R), sl.reshape(S, C),
             n_mssort.astype(jnp.int32), sort_elems)
 
 
-def fused_sort_merge(keys, vals, plens, *, R,
-                     sort_fn=ref.stream_sort_ref, with_counters=True,
-                     detailed=False):
+def fused_sort_merge(keys, vals, plens, *, R, backend="auto",
+                     with_counters=True, detailed=False):
     """Device-resident sort + zip-merge tree over padded product streams.
 
     keys/vals: (S, L) unsorted partial products (EMPTY padded), L = C*R
     with C a power of two; plens: (S,) valid lengths.  Chunk-sorts every
-    R-chunk, then runs the full merge tree with all pointer state on the
-    device.  Returns (keys (S, L), vals, lens (S,), counters (6,) int32:
-    [n_mssort, sort_elems, n_mszip, zip_elems, chunk_loads, chunk_stores])
-    with the host driver's instruction accounting (zeros when
-    ``with_counters=False`` skips the pointer state machine).
+    R-chunk through the resolved backend's ``chunk_sort``, then runs the
+    full merge tree with all pointer state on the device (the merge tree
+    is backend-shared today — ``KernelBackend.merge_partitions`` is the
+    seam a TPU-native merge kernel would fill).  Returns (keys (S, L),
+    vals, lens (S,), counters (6,) int32: [n_mssort, sort_elems, n_mszip,
+    zip_elems, chunk_loads, chunk_stores]) with the host driver's
+    instruction accounting (zeros when ``with_counters=False`` skips the
+    pointer state machine).
 
     ``detailed=True`` instead returns the per-(round, pair) merge
     counters from ``merge_tree.zip_merge_tree`` in place of the 6-vector
@@ -101,7 +108,7 @@ def fused_sort_merge(keys, vals, plens, *, R,
     plens-derivable, so they are omitted there).
     """
     sk, sv, sl, n_mssort, sort_elems = chunk_sort_partitions(
-        keys, vals, plens, R=R, sort_fn=sort_fn)
+        keys, vals, plens, R=R, backend=backend)
     if detailed:
         return merge_tree.zip_merge_tree(sk, sv, sl, R=R, detailed=True)
     mk, mv, ml, zc = merge_tree.zip_merge_tree(sk, sv, sl, R=R,

@@ -156,7 +156,7 @@ def _sharded_esc_fn(mesh, cap_products: int, n_rows: int, n_cols: int):
     from jax.experimental.shard_map import shard_map
 
     def local(ip, ix, d, bip, bix, bd):
-        return jax.vmap(sg._esc_core_impl,
+        return jax.vmap(sg.esc_core_impl,
                         in_axes=(0, 0, 0, 0, 0, 0, None, None, None))(
             ip, ix, d, bip, bix, bd, cap_products, n_rows, n_cols)
 
@@ -216,7 +216,7 @@ def execute_sharded(sp: ShardPlan, A: BatchedCSR,
                     B: BatchedCSR) -> BatchedCSR:
     """Run a ShardPlan; bit-identical to ``execute_batched`` on the same
     base plan, with lanes placed per the balanced assignment."""
-    dp._check_batch(A, B)
+    dp.check_batch(A, B)
     if A.shape != sp.base.a_shape or B.shape != sp.base.b_shape \
             or A.batch != sp.base.batch:
         raise ValueError(
@@ -227,7 +227,7 @@ def execute_sharded(sp: ShardPlan, A: BatchedCSR,
         outs = _execute_esc_sharded(sp, A, B)
     else:
         outs = _execute_groups(sp, A, B)
-    return dp._assemble_batched(outs, A, B)
+    return dp.assemble_batched(outs, A, B)
 
 
 def spgemm_batched_sharded(A: BatchedCSR, B: BatchedCSR,

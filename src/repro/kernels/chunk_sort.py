@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: the fused pipeline's chunk-sort stage.
+
+Sorts ALL (N, R) = (S*C, R) chunks of a work bucket in one ``pallas_call``
+issue — the sort stage ``chunk_sort_partitions`` feeds into the
+device-resident zip-merge tree.  Unlike ``stream_sort_pallas`` (the
+host-tier mssort kernel, whose duplicate accumulation is a log-step tree
+scan), this kernel is **bit-identical** to the XLA oracle
+(``ref.stream_sort_ref`` / ``merge_tree.sort_chunks_linear``):
+
+  * the sort is a bitonic network over the R lane dimension made *stable*
+    by comparing (key, source-lane) pairs lexicographically, so ties keep
+    product order exactly like a stable argsort;
+  * duplicate values accumulate in a left-to-right linear association
+    (an R-step sequential run prefix, the same adds in the same order as
+    ``segment_sum``'s index-order accumulation) — a tree reduction would
+    round differently;
+  * the compress pass routes each surviving tuple through a one-hot MXU
+    matmul with exactly one unit coefficient per output lane, which moves
+    keys (16-bit split) and values bit-exactly.
+
+One program sorts a (BLOCK_N, R) tile held in VMEM; the grid walks blocks
+of chunks, so a whole bucket's S*C chunks are one kernel issue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import EMPTY
+from repro.kernels import _network as net
+
+
+def _compare_exchange_stable(keys, idx, vals, j, asc):
+    """One compare-exchange stage at stride j on (key, idx) pairs.
+
+    ``idx`` is the original lane of each element — unique per row — so the
+    lexicographic order is total and the network reproduces a *stable*
+    ascending sort of the keys."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
+    is_lower = (lane & j) == 0
+    pk = net.xor_shuffle(keys, j)
+    pi = net.xor_shuffle(idx, j)
+    gt = (keys > pk) | ((keys == pk) & (idx > pi))
+    lt = (keys < pk) | ((keys == pk) & (idx < pi))
+    take_partner = jnp.where(asc, jnp.where(is_lower, gt, lt),
+                             jnp.where(is_lower, lt, gt))
+    return (jnp.where(take_partner, pk, keys),
+            jnp.where(take_partner, pi, idx),
+            jnp.where(take_partner, net.xor_shuffle(vals, j), vals))
+
+
+def _bitonic_sort_stable(keys, idx, vals):
+    """Full ascending stable bitonic sort of each row by (key, idx)."""
+    W = keys.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
+    k = 2
+    while k <= W:
+        asc = (lane & k) == 0
+        j = k // 2
+        while j >= 1:
+            keys, idx, vals = _compare_exchange_stable(keys, idx, vals, j,
+                                                       asc)
+            j //= 2
+        k *= 2
+    return keys, idx, vals
+
+
+def _chunk_sort_kernel(keys_ref, vals_ref, lens_ref, ok_ref, ov_ref, ol_ref):
+    keys = keys_ref[...]
+    vals = vals_ref[...].astype(jnp.float32)
+    lens = lens_ref[...]  # (BLOCK_N, 1)
+    R = keys.shape[-1]
+    r = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    valid = r < lens
+    k = jnp.where(valid, keys, EMPTY)
+    v = jnp.where(valid, vals, 0.0)
+    # stable ascending sort (ties keep product order, like stable argsort)
+    k, _, v = _bitonic_sort_stable(k, r, v)
+    # linear run accumulation: acc[i] = left-to-right prefix of i's run;
+    # adding the predecessor's finished prefix keeps the float association
+    # linear, bit-identical to segment_sum's index-order adds
+    start = k != net.shift_right(k, 1, EMPTY)
+    s = jnp.where(start, r, 0)
+    d = 1
+    while d < R:  # Hillis-Steele max-scan: start index of each run
+        s = jnp.maximum(s, net.shift_right(s, d, 0))
+        d *= 2
+    run_pos = r - s
+    acc = v
+    for d in range(1, R):
+        shifted = net.shift_right(acc, 1, 0.0)
+        acc = jnp.where(run_pos == d, shifted + v, acc)
+    # keep the run total (last element of each run), then compress
+    is_last = (k != net.shift_left(k, 1, EMPTY)) & (k != EMPTY)
+    k2 = jnp.where(is_last, k, EMPTY)
+    v2 = jnp.where(is_last, acc, 0.0)
+    k3, v3, n = net.compress_onehot(k2, v2)
+    ok_ref[...] = k3
+    ov_ref[...] = v3.astype(ov_ref.dtype)
+    ol_ref[...] = n[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def chunk_sort_pallas(keys, vals, lens, *, block_n: int = 8,
+                      interpret: bool = True):
+    """Sort/combine/compress all N key-value chunks in one kernel issue.
+
+    keys: (N, R) int32; vals: (N, R) float; lens: (N,) int32.  R must be
+    a power of two.  Returns (out_keys, out_vals, out_lens), bit-identical
+    to ``ref.stream_sort_ref`` on the same inputs."""
+    N, R = keys.shape
+    assert R & (R - 1) == 0, "R must be a power of two"
+    if N == 0:  # zero chunks: same empty outputs as the xla oracle
+        return keys, vals, lens.astype(jnp.int32)
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=EMPTY)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        lens = jnp.pad(lens, (0, pad))
+    Np = N + pad
+    lens2 = lens[:, None].astype(jnp.int32)
+    grid = (Np // block_n,)
+    kv_spec = pl.BlockSpec((block_n, R), lambda i: (i, 0))
+    len_spec = pl.BlockSpec((block_n, 1), lambda i: (i, 0))
+    ok, ov, ol = pl.pallas_call(
+        _chunk_sort_kernel,
+        grid=grid,
+        in_specs=[kv_spec, kv_spec, len_spec],
+        out_specs=[kv_spec, kv_spec, len_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, R), jnp.int32),
+            jax.ShapeDtypeStruct((Np, R), vals.dtype),
+            jax.ShapeDtypeStruct((Np, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, vals, lens2)
+    return ok[:N], ov[:N], ol[:N, 0]

@@ -1,11 +1,10 @@
-"""Public jit'd wrappers over the Pallas kernels with impl selection.
+"""Public jit'd wrappers over the zipper kernels, routed through the
+kernel-backend registry (``kernels/backend.py``).
 
-``impl``:
-  "pallas" — pl.pallas_call (interpret=True automatically off-TPU)
-  "xla"    — the pure-jnp oracle (ref.py), used for GSPMD dry-runs where
-             the model graph must lower for a 512-device CPU mesh
-  "auto"   — pallas on TPU, xla elsewhere (kernels are still exercised in
-             interpret mode by the test/benchmark suites)
+``backend`` everywhere below is a registered backend name (``"xla"``,
+``"pallas"``, ``"ref"``), ``"auto"`` (pallas on TPU, xla elsewhere), or a
+resolved :class:`~repro.kernels.backend.KernelBackend` instance.  Unknown
+names raise ``ValueError`` listing the registered backends.
 """
 from __future__ import annotations
 
@@ -15,24 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import EMPTY
-from repro.kernels import merge_tree, ref
-from repro.kernels.stream_sort import stream_sort_pallas
-from repro.kernels.stream_merge import stream_merge_pallas
-
-# jitted oracles: the xla impl is used as a driver workhorse (SpGEMM chunk
-# loops), where eager dispatch of the vmap/segment_sum graph would dominate
-_sort_ref = jax.jit(ref.stream_sort_ref)
-_merge_ref = jax.jit(ref.stream_merge_ref)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _resolve(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if _on_tpu() else "xla"
-    return impl
+from repro.kernels import backend as kb
 
 
 def _pad_streams(cap_s, keys, vals, lens):
@@ -52,67 +34,54 @@ def _pad_streams(cap_s, keys, vals, lens):
     return keys, vals, lens, S
 
 
-def stream_sort(keys, vals, lens, *, impl: str = "auto", block_s: int = 8,
-                cap_s: int | None = None):
+def stream_sort(keys, vals, lens, *, backend="auto", cap_s=None):
     """mssortk+mssortv: sort/combine/compress S key-value chunks.
 
     ``cap_s``: optional static stream-count capacity; inputs with S < cap_s
     are padded up so every call shares one compiled kernel."""
     keys, vals, lens, S = _pad_streams(cap_s, keys, vals, lens)
-    impl = _resolve(impl)
-    if impl == "pallas":
-        ok, ov, ol = stream_sort_pallas(keys, vals, lens, block_s=block_s,
-                                        interpret=not _on_tpu())
-    else:
-        ok, ov, ol = _sort_ref(keys, vals, lens)
+    bk = kb.resolve_backend(backend)
+    ok, ov, ol = bk.stream_sort(keys, vals, lens)
     return ok[:S], ov[:S], ol[:S]
 
 
-def stream_merge(ka, va, la, kb, vb, lb, *, impl: str = "auto",
-                 block_s: int = 8, cap_s: int | None = None):
+def stream_merge(ka, va, la, kb_, vb, lb, *, backend="auto", cap_s=None):
     """mszipk+mszipv: merge two sorted chunks per stream.
 
     ``cap_s``: as in :func:`stream_sort` — static stream-count capacity."""
     ka, va, la, S = _pad_streams(cap_s, ka, va, la)
-    kb, vb, lb, _ = _pad_streams(cap_s, kb, vb, lb)
-    impl = _resolve(impl)
-    if impl == "pallas":
-        outs = stream_merge_pallas(ka, va, la, kb, vb, lb, block_s=block_s,
-                                   interpret=not _on_tpu())
-    else:
-        outs = _merge_ref(ka, va, la, kb, vb, lb)
+    kb_, vb, lb, _ = _pad_streams(cap_s, kb_, vb, lb)
+    bk = kb.resolve_backend(backend)
+    outs = bk.stream_merge(ka, va, la, kb_, vb, lb)
     return tuple(o[:S] for o in outs)
 
 
-def _sort_chunk_fn(impl: str):
-    """The (S, R) chunk-sort kernel a device-resident pipeline should issue.
-
-    The xla path uses the scatter-free ``sort_chunks_linear`` — byte-
-    identical to ``ref.stream_sort_ref`` (same stable order, same linear
-    accumulation) but much cheaper inside a fused computation."""
-    if _resolve(impl) == "pallas":
-        return functools.partial(stream_sort_pallas, interpret=not _on_tpu())
-    return merge_tree.sort_chunks_linear
+@functools.partial(jax.jit, static_argnames=("R", "pair_streams",
+                                             "with_counters", "backend"))
+def _merge_partitions_jit(ka, va, la, kb_, vb, lb, *, R, pair_streams,
+                          with_counters, backend):
+    return kb.get_backend(backend).merge_partitions(
+        ka, va, la, kb_, vb, lb, R=R, pair_streams=pair_streams,
+        with_counters=with_counters)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("R", "pair_streams", "with_counters"))
-def merge_partitions(ka, va, la, kb, vb, lb, *, R: int = 16,
+def merge_partitions(ka, va, la, kb_, vb, lb, *, R: int = 16,
                      pair_streams: int | None = None,
-                     with_counters: bool = True):
+                     with_counters: bool = True, backend="auto"):
     """Device-resident partition merge: the full data-dependent chunk
     advancement of two padded (N, L) sorted-unique partitions, with the
     pointer state machine under ``jax.lax.while_loop`` (see
     kernels/merge_tree.py).
 
     Returns (keys (N, La+Lb), vals, lens, MergeCounters)."""
-    return merge_tree.merge_partitions(
+    return _merge_partitions_jit(
         jnp.asarray(ka), jnp.asarray(va), jnp.asarray(la),
-        jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(lb),
-        R=R, pair_streams=pair_streams, with_counters=with_counters)
+        jnp.asarray(kb_), jnp.asarray(vb), jnp.asarray(lb),
+        R=R, pair_streams=pair_streams, with_counters=with_counters,
+        backend=kb.resolve_backend(backend).name)
 
 
-def sort_tokens_by_key(keys, *, impl: str = "auto"):
+def sort_tokens_by_key(keys, *, backend="auto"):
     """Zipper-dispatch helper used by the MoE layer: ascending argsort of a
     1-D key vector, implemented as a stream sort whose values are slot ids.
 
@@ -125,12 +94,11 @@ def sort_tokens_by_key(keys, *, impl: str = "auto"):
     bits = max(1, (n - 1).bit_length())
     slot = jnp.arange(n, dtype=jnp.int32)
     packed = (keys.astype(jnp.int32) << bits) | slot
-    impl = _resolve(impl)
-    if impl == "pallas" and n & (n - 1) == 0 and n >= 8:
+    bk = kb.resolve_backend(backend)
+    if bk.name == "pallas" and n & (n - 1) == 0 and n >= 8:
         vals = slot.astype(jnp.float32)
-        pk, pv, _ = stream_sort_pallas(packed[None, :], vals[None, :],
-                                       jnp.array([n], jnp.int32),
-                                       interpret=not _on_tpu())
+        pk, pv, _ = bk.stream_sort(packed[None, :], vals[None, :],
+                                   jnp.array([n], jnp.int32))
         perm = pv[0].astype(jnp.int32)
         return pk[0] >> bits, perm
     order = jnp.argsort(packed)

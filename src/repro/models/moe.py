@@ -114,7 +114,7 @@ def _einsum_moe(p, x, cfg):
     cap = _capacity(T, k, E, cfg.capacity_factor)
     # zipper-sort the (expert, slot) stream — paper primitive, XLA/Pallas path
     flat_ids = ids.reshape(-1)  # (T*k)
-    _, perm = kops.sort_tokens_by_key(flat_ids, impl="xla")
+    _, perm = kops.sort_tokens_by_key(flat_ids, backend="xla")
     sorted_ids = flat_ids[perm]
     # position of each assignment within its expert group
     hot = jax.nn.one_hot(sorted_ids, E, dtype=jnp.int32)
@@ -170,7 +170,7 @@ def _shardmap_moe(p, x, cfg):
         wk = jax.nn.softmax(wk, axis=-1)
         flat_ids = ids.reshape(-1).astype(jnp.int32)
         # ---- zipper sort (mssortk/mssortv semantics, group-not-merge) ----
-        _, perm = kops.sort_tokens_by_key(flat_ids, impl="xla")
+        _, perm = kops.sort_tokens_by_key(flat_ids, backend="xla")
         sorted_ids = flat_ids[perm]
         hot = jax.nn.one_hot(sorted_ids, E, dtype=jnp.int32)
         pos_sorted = (jnp.cumsum(hot, axis=0) - hot)[

@@ -82,7 +82,7 @@ def _merge_two(ka, va, kb, vb, R):
         klo, vlo, khi, vhi, na, nb, ol = kops.stream_merge(
             jnp.asarray(ca[None]), jnp.asarray(cav[None]),
             jnp.asarray(la[None]), jnp.asarray(cb[None]),
-            jnp.asarray(cbv[None]), jnp.asarray(lb[None]), impl="xla")
+            jnp.asarray(cbv[None]), jnp.asarray(lb[None]), backend="xla")
         n = int(ol[0])
         merged_k = np.concatenate([np.asarray(klo[0]), np.asarray(khi[0])])[:n]
         merged_v = np.concatenate([np.asarray(vlo[0]), np.asarray(vhi[0])])[:n]

@@ -1,0 +1,202 @@
+"""Kernel-backend registry and xla/pallas parity.
+
+The backend layer's contract is that every registered backend is
+BIT-compatible: same keys, values, lengths, and instruction counters on
+the same inputs, so backend choice is purely a performance decision the
+dispatch layer can autotune.  The sweeps here drive the pallas backend in
+interpret mode (the CI ``backend-parity`` step runs this file with
+``JAX_PLATFORMS=cpu``) against the xla oracle backend.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import dispatch as dp
+from repro.core import spgemm_engines as sg
+from repro.core import stream as kvstream
+from repro.core.formats import EMPTY, random_sparse
+from repro.kernels import backend as kb
+from repro.kernels import ref
+from repro.kernels.chunk_sort import chunk_sort_pallas
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_backends():
+    names = set(kb.available_backends())
+    assert {"xla", "pallas", "ref"} <= names
+    for bk in kb.available_backends().values():
+        for prim in ("chunk_sort", "stream_sort", "stream_merge",
+                     "merge_partitions"):
+            assert callable(getattr(bk, prim)), (bk.name, prim)
+
+
+def test_backend_capability_flags():
+    assert kb.get_backend("xla").on_device
+    assert kb.get_backend("pallas").on_device
+    assert not kb.get_backend("ref").on_device
+    assert not kb.get_backend("ref").measure
+    assert kb.get_backend("pallas").counters_exact
+
+
+def test_resolve_backend():
+    assert kb.resolve_backend("xla").name == "xla"
+    # auto: pallas on TPU, xla elsewhere
+    want = "pallas" if kb.on_tpu() else "xla"
+    assert kb.resolve_backend("auto").name == want
+    # an already-resolved instance passes through
+    bk = kb.get_backend("pallas")
+    assert kb.resolve_backend(bk) is bk
+
+
+def test_unknown_backend_raises_listing_registered():
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        kb.get_backend("nope")
+    with pytest.raises(ValueError) as ei:
+        kb.resolve_backend("typo")
+    for name in kb.available_backends():
+        assert name in str(ei.value)
+
+
+def test_spgemm_spz_unknown_backend_raises():
+    """The registry replaced the old silent fall-through to XLA: an
+    unknown backend name must raise, listing the registered backends."""
+    A = random_sparse(8, 8, 0.1, seed=0)
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        sg.spgemm_spz(A, A, backend="nope")
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        dp.spgemm(A, A, engine="spz", backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# native-Pallas chunk sort: bit-identity vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("key_hi", [2, 9, 1000])
+@pytest.mark.parametrize("N,R", [(1, 8), (5, 16), (12, 32)])
+def test_chunk_sort_pallas_bit_identical_to_ref(N, R, key_hi):
+    rng = np.random.default_rng(N * R + key_hi)
+    lens = rng.integers(0, R + 1, N).astype(np.int32)
+    lens[0] = 0  # always include an empty chunk
+    keys = rng.integers(0, key_hi, (N, R)).astype(np.int32)
+    vals = rng.standard_normal((N, R)).astype(np.float32)
+    args = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lens))
+    for r, p in zip(ref.stream_sort_ref(*args),
+                    chunk_sort_pallas(*args, interpret=True)):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_chunk_sort_zero_chunks_matches_oracle():
+    """N=0 (an empty chunk batch) must return empty outputs on every
+    backend, not crash — part of the bit-compatibility contract."""
+    keys = jnp.zeros((0, 8), jnp.int32)
+    vals = jnp.zeros((0, 8), jnp.float32)
+    lens = jnp.zeros((0,), jnp.int32)
+    for bk in kb.available_backends().values():
+        ok, ov, ol = bk.chunk_sort(keys, vals, lens)
+        assert ok.shape == (0, 8) and ov.shape == (0, 8)
+        assert ol.shape == (0,)
+
+
+def _padded_streams(rng, S, L, key_hi):
+    """(S, L) EMPTY-padded unsorted product streams with ragged plens
+    (always including at least one empty stream when S > 1)."""
+    plens = rng.integers(0, L + 1, S).astype(np.int32)
+    if S > 1:
+        plens[rng.integers(0, S)] = 0
+    mask = np.arange(L)[None, :] < plens[:, None]
+    keys = np.where(mask, rng.integers(0, key_hi, (S, L)), EMPTY)
+    vals = np.where(mask, rng.standard_normal((S, L)), 0.0)
+    return (jnp.asarray(keys.astype(np.int32)),
+            jnp.asarray(vals.astype(np.float32)), jnp.asarray(plens))
+
+
+def _assert_backend_parity(S, L, R, seed):
+    """chunk_sort_partitions + fused_sort_merge: pallas (interpret) must
+    be bit-identical to xla — keys, vals, lens AND the exact mssort/mszip
+    counter values."""
+    rng = np.random.default_rng(seed)
+    keys, vals, plens = _padded_streams(rng, S, L, key_hi=3 * L)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        sk, sv, sl, n_mssort, sort_elems = kvstream.chunk_sort_partitions(
+            keys, vals, plens, R=R, backend=backend)
+        mk, mv, ml, counters = kvstream.fused_sort_merge(
+            keys, vals, plens, R=R, backend=backend)
+        outs[backend] = [sk, sv, sl, n_mssort, sort_elems,
+                         mk, mv, ml, counters]
+    for i, (x, p) in enumerate(zip(*outs.values())):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p),
+                                      err_msg=f"output {i}")
+
+
+@pytest.mark.parametrize("S,L,R", [(4, 32, 8), (1, 16, 16), (6, 64, 16)])
+def test_backend_parity_fixed_buckets(S, L, R):
+    _assert_backend_parity(S, L, R, seed=S + L + R)
+
+
+def test_backend_parity_all_empty_streams():
+    S, L, R = 4, 32, 8
+    keys = jnp.full((S, L), EMPTY, jnp.int32)
+    vals = jnp.zeros((S, L), jnp.float32)
+    plens = jnp.zeros((S,), jnp.int32)
+    for backend in ("xla", "pallas"):
+        mk, mv, ml, counters = kvstream.fused_sort_merge(
+            keys, vals, plens, R=R, backend=backend)
+        assert int(np.asarray(ml).sum()) == 0
+        assert int(np.asarray(counters)[2]) == 0  # n_mszip
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 8),            # S streams
+           st.sampled_from([1, 2, 4]),   # C chunks per stream
+           st.sampled_from([8, 16]),     # R chunk width
+           st.integers(0, 10_000))
+    def test_prop_backend_parity_random_buckets(S, C, R, seed):
+        """Random (S, L, R) work buckets, ragged/empty streams included:
+        keys/vals/lens and mssort/mszip counters bit-equal across
+        backends."""
+        _assert_backend_parity(S, C * R, R, seed)
+
+
+# ---------------------------------------------------------------------------
+# the fused spz engine across backends
+# ---------------------------------------------------------------------------
+
+def _assert_spz_backends_identical(A, B, **kw):
+    out_x, st_x = sg.spgemm_spz(A, B, backend="xla", driver="fused", **kw)
+    out_p, st_p = sg.spgemm_spz(A, B, backend="pallas", driver="fused", **kw)
+    nnz = int(np.asarray(out_x.indptr)[-1])
+    np.testing.assert_array_equal(np.asarray(out_x.indptr),
+                                  np.asarray(out_p.indptr))
+    np.testing.assert_array_equal(np.asarray(out_x.indices)[:nnz],
+                                  np.asarray(out_p.indices)[:nnz])
+    np.testing.assert_array_equal(np.asarray(out_x.data)[:nnz],
+                                  np.asarray(out_p.data)[:nnz])
+    assert (st_x.n_mssort, st_x.sort_elems, st_x.n_mszip, st_x.zip_elems) \
+        == (st_p.n_mssort, st_p.sort_elems, st_p.n_mszip, st_p.zip_elems)
+
+
+def test_fused_spz_pallas_backend_bit_identical():
+    A = random_sparse(48, 48, 0.05, seed=3, pattern="powerlaw")
+    _assert_spz_backends_identical(A, A, R=8)
+
+
+@pytest.mark.slow  # 13 interpret-mode fused runs (~minutes)
+def test_fused_spz_pallas_backend_all_table3_matrices():
+    """The acceptance sweep: on every table3 matrix the Pallas chunk-sort
+    runs inside spgemm_spz(driver="fused") via the registry and the CSR
+    output + instruction counters are bit-identical to the xla backend."""
+    from benchmarks import datasets
+    for name in datasets.names():
+        A = datasets.build(name)
+        _assert_spz_backends_identical(A, A, R=16)

@@ -73,7 +73,7 @@ def test_stream_sort_empty_streams():
     vals = np.zeros((4, 16), np.float32)
     lens = np.zeros(4, np.int32)
     k, v, l = ops.stream_sort(jnp.asarray(keys), jnp.asarray(vals),
-                              jnp.asarray(lens), impl="pallas")
+                              jnp.asarray(lens), backend="pallas")
     assert int(np.asarray(l).sum()) == 0
     assert (np.asarray(k) == EMPTY).all()
 
@@ -85,7 +85,7 @@ def test_stream_merge_one_side_empty():
     lb = np.zeros(3, np.int32)
     res = ops.stream_merge(*(jnp.asarray(x)
                              for x in (ka, va, la, kb, vb, lb)),
-                           impl="pallas")
+                           backend="pallas")
     _, _, _, _, ca, cb, ol = res
     # unmergeable: nothing advances, nothing is emitted
     assert int(np.asarray(ca).sum()) == 0
@@ -100,7 +100,7 @@ def test_merge_conservation_and_counts():
     klo, vlo, khi, vhi, ca, cb, ol = (
         np.asarray(t) for t in ops.stream_merge(
             *(jnp.asarray(x) for x in (ka, va, la, kb, vb, lb)),
-            impl="pallas"))
+            backend="pallas"))
     for s in range(8):
         emitted = np.concatenate([vlo[s], vhi[s]])[:ol[s]].sum()
         # consumed = keys <= cutoff on each side
@@ -110,7 +110,7 @@ def test_merge_conservation_and_counts():
 
 def test_sort_tokens_by_key_matches_argsort():
     keys = jnp.asarray(RNG.integers(0, 7, 128).astype(np.int32))
-    sk, perm = ops.sort_tokens_by_key(keys, impl="pallas")
+    sk, perm = ops.sort_tokens_by_key(keys, backend="pallas")
     assert (np.diff(np.asarray(sk)) >= 0).all()
     np.testing.assert_array_equal(np.asarray(keys)[np.asarray(perm)],
                                   np.asarray(sk))

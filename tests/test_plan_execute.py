@@ -83,7 +83,7 @@ def test_plan_resolves_kwargs_at_plan_time(cache):
     """auto drops kwargs the selected engine can't take; explicit engines
     stay strict (the TypeError fires at execute)."""
     A = random_sparse(64, 64, 0.05, seed=3)  # dense regime -> esc
-    p = dp.plan(A, A, "auto", cache=cache, R=16, impl="xla")
+    p = dp.plan(A, A, "auto", cache=cache, R=16, backend="xla")
     if p.engine == "esc":
         assert "R" not in p.kwargs_dict
     out = dp.execute(p, A, A)
@@ -124,6 +124,109 @@ def test_plan_memo_invalidated_by_autotune(tmp_path, monkeypatch):
     assert p2.source == "cache" and p2.engine == tuned.engine
     assert p1 is not p2
     dp.clear_feature_cache()
+
+
+# ---------------------------------------------------------------------------
+# kernel backend as a planned dimension
+# ---------------------------------------------------------------------------
+
+def test_plan_resolves_backend_into_kwargs_and_jit_key(cache):
+    """Backend-aware engines get the resolved backend folded into the
+    plan's kwargs; the jit_key separates compilations per backend."""
+    A = random_sparse(48, 48, 0.05, seed=2)
+    px = dp.plan(A, A, "spz-fused", backend="xla", R=8)
+    pp = dp.plan(A, A, "spz-fused", backend="pallas", R=8)
+    assert px.backend == "xla" and pp.backend == "pallas"
+    assert px.kwargs_dict["backend"] == "xla"
+    assert pp.kwargs_dict["backend"] == "pallas"
+    assert px.jit_key != pp.jit_key
+    # the two plans execute to bit-identical outputs (backends are
+    # bit-compatible by contract)
+    _bit_equal(dp.execute(px, A, A), dp.execute(pp, A, A))
+    # "auto" resolves to a concrete registered backend at plan time
+    pa = dp.plan(A, A, "spz-fused", R=8)
+    from repro.kernels import backend as kb
+    assert pa.backend == kb.resolve_backend("auto").name
+
+
+def test_plan_backend_for_non_aware_engine(cache):
+    """esc takes no kernel backend: explicit pins are planning errors,
+    auto selection just drops the irrelevant dimension."""
+    A = random_sparse(64, 64, 0.05, seed=3)  # dense regime -> esc
+    with pytest.raises(ValueError, match="does not take a kernel backend"):
+        dp.plan(A, A, "esc", backend="xla")
+    p = dp.plan(A, A, "auto", backend="xla", cache=cache)
+    if p.engine == "esc":
+        assert p.backend is None and "backend" not in p.kwargs_dict
+
+
+def test_two_backends_autotune_independently(tmp_path):
+    """The acceptance contract: the same shape bucket autotunes one plan
+    per pinned backend — distinct cache keys, distinct sticky entries."""
+    cache = dp.AutotuneCache(str(tmp_path / "autotune.json"))
+    A = random_sparse(16, 16, 0.08, seed=1)
+    px = dp.plan(A, A, "auto", backend="xla", autotune=True, cache=cache)
+    pp = dp.plan(A, A, "auto", backend="pallas", autotune=True, cache=cache)
+    assert px.source == pp.source == "autotune"
+    assert px.cache_key != pp.cache_key
+    assert px.cache_key.endswith("|bk=xla")
+    assert pp.cache_key.endswith("|bk=pallas")
+    ex = cache.get(px.cache_key)
+    ep = cache.get(pp.cache_key)
+    assert ex is not None and ep is not None and ex["source"] == "autotune"
+    # a backend-aware winner records its backend; later cached plans for
+    # the pinned-pallas bucket keep routing to pallas kernels
+    if dp.get_engine(pp.engine).backend_aware:
+        assert pp.backend == "pallas" and ep["backend"] == "pallas"
+    p2 = dp.plan(A, A, "auto", backend="pallas", cache=cache)
+    assert p2.source == "cache" and p2.engine == pp.engine
+    assert p2.backend == pp.backend
+
+
+def test_autotune_with_auto_backend_sweeps_backends(tmp_path):
+    """With backend="auto" the backend joins the autotune search space:
+    backend-aware engines are measured once per measurable backend."""
+    cache = dp.AutotuneCache(str(tmp_path / "autotune.json"))
+    A = random_sparse(12, 12, 0.1, seed=4)
+    measured = []
+    real = dp._measure
+
+    def spy(spec, a, b, repeat=1, backend=None):
+        measured.append((spec.name, backend))
+        return real(spec, a, b, repeat, backend)
+
+    try:
+        dp._measure = spy
+        p = dp.plan(A, A, "auto", autotune=True, cache=cache)
+    finally:
+        dp._measure = real
+    assert p.source == "autotune"
+    spz_backends = {bk for name, bk in measured if name == "spz"}
+    from repro.kernels import backend as kb
+    # off-TPU the interpret-mode pallas tier is excluded from the sweep
+    # (needs_tpu_for_perf): measuring it could only lose, slowly
+    want = {bk.name for bk in kb.measurable_backends()}
+    assert spz_backends == want
+    if not kb.on_tpu():
+        assert "pallas" not in spz_backends
+    assert ("esc", None) in measured
+
+
+def test_cached_backend_is_not_trusted_blindly(tmp_path):
+    """A shared cache entry naming an unknown backend (version skew) or
+    a TPU-only one replayed off-TPU must fall back to "auto", never
+    raise or route execution through a degraded tier."""
+    cache = dp.AutotuneCache(str(tmp_path / "autotune.json"))
+    A = random_sparse(24, 24, 0.05, seed=6)
+    key = dp.cache_key(A, A)
+    from repro.kernels import backend as kb
+    for bad in ("no-such-backend", "pallas" if not kb.on_tpu() else "xla"):
+        cache.put(key, "spz-fused", "autotune", backend=bad)
+        p = dp.plan(A, A, "auto", cache=cache)
+        assert p.source == "cache" and p.engine == "spz-fused"
+        if bad == "no-such-backend" or not kb.on_tpu():
+            assert p.backend == kb.resolve_backend("auto").name
+        dp.execute(p, A, A)  # and the plan actually runs
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +276,24 @@ def test_batched_auto_feeds_autotune_cache(cache):
     assert cache.get(p1.cache_key) is not None
     p2 = dp.plan_batched(A, A, "auto", cache=cache)
     assert p2.source == "cache" and p2.engine == p1.engine
+
+
+def test_batched_plan_resolves_backend(cache):
+    """The batched spz drivers are backend-aware: the plan pins the
+    resolved backend and the two backends execute bit-identically."""
+    mats = _ragged_batch()
+    A = batch_csr(mats)
+    px = dp.plan_batched(A, A, "spz-fused", backend="xla", R=8, S=32,
+                         cache=cache)
+    pp = dp.plan_batched(A, A, "spz-fused", backend="pallas", R=8, S=32,
+                         cache=cache)
+    assert px.backend == "xla" and pp.backend == "pallas"
+    assert px.jit_key != pp.jit_key
+    ox = dp.execute_batched(px, A, A)
+    op = dp.execute_batched(pp, A, A)
+    for name in ("indptr", "indices", "data", "valid"):
+        assert np.array_equal(np.asarray(getattr(ox, name)),
+                              np.asarray(getattr(op, name))), name
 
 
 def test_execute_batched_rejects_wrong_plan_kind(cache):

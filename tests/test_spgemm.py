@@ -49,7 +49,7 @@ def test_canonical_spgemm_is_dispatch_and_alias_deprecated():
 def test_spz_chunk_widths(R):
     A = random_sparse(64, 64, 0.05, seed=5, pattern="powerlaw")
     want = _dense(sg.spgemm_scl_array(A, A))
-    out, stats = sg.spgemm_spz(A, A, R=R, impl="xla")
+    out, stats = sg.spgemm_spz(A, A, R=R, backend="xla")
     np.testing.assert_allclose(_dense(out), want, rtol=1e-4, atol=1e-4)
     assert stats.n_mssort > 0
 
@@ -59,7 +59,7 @@ def test_spz_rectangular():
     A = random_sparse(40, 70, 0.06, seed=1)
     B = random_sparse(70, 50, 0.06, seed=2)
     want = _dense(sg.spgemm_scl_array(A, B))
-    out, _ = sg.spgemm_spz(A, B, R=16, impl="xla")
+    out, _ = sg.spgemm_spz(A, B, R=16, backend="xla")
     np.testing.assert_allclose(_dense(out), want, rtol=1e-4, atol=1e-4)
     got_esc = _dense(sg.spgemm_esc(A, B))
     np.testing.assert_allclose(got_esc, want, rtol=1e-4, atol=1e-4)
@@ -67,8 +67,8 @@ def test_spz_rectangular():
 
 def test_rsort_reduces_or_equals_instructions_on_skewed():
     A = random_sparse(128, 128, 0.04, seed=9, pattern="powerlaw")
-    _, s0 = sg.spgemm_spz(A, A, R=16, S=16, impl="xla")
-    _, s1 = sg.spgemm_spz(A, A, R=16, S=16, rsort=True, impl="xla")
+    _, s0 = sg.spgemm_spz(A, A, R=16, S=16, backend="xla")
+    _, s1 = sg.spgemm_spz(A, A, R=16, S=16, rsort=True, backend="xla")
     assert s1.n_mssort + s1.n_mszip <= s0.n_mssort + s0.n_mszip
 
 
@@ -105,7 +105,7 @@ if HAVE_HYPOTHESIS:
     @given(sparse_pair())
     def test_prop_spz_equals_oracle(A):
         want = _dense(sg.spgemm_scl_array(A, A))
-        got = _dense(sg.spgemm_spz(A, A, R=16, impl="xla")[0])
+        got = _dense(sg.spgemm_spz(A, A, R=16, backend="xla")[0])
         np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
     @settings(max_examples=25, deadline=None)

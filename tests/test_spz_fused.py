@@ -35,8 +35,8 @@ def _csr_arrays(m):
 
 
 def _assert_drivers_identical(A, B, **kw):
-    out_h, st_h = sg.spgemm_spz(A, B, driver="host", impl="xla", **kw)
-    out_f, st_f = sg.spgemm_spz(A, B, driver="fused", impl="xla", **kw)
+    out_h, st_h = sg.spgemm_spz(A, B, driver="host", backend="xla", **kw)
+    out_f, st_f = sg.spgemm_spz(A, B, driver="fused", backend="xla", **kw)
     for h, f in zip(_csr_arrays(out_h), _csr_arrays(out_f)):
         np.testing.assert_array_equal(h, f)
     assert (st_h.n_mssort, st_h.sort_elems, st_h.n_mszip, st_h.zip_elems) \
@@ -74,7 +74,7 @@ def test_fused_rectangular_and_rsort():
 def test_fused_structure_identical_to_oracle():
     A = random_sparse(80, 80, 0.05, seed=3, pattern="powerlaw")
     oracle = sg.spgemm_scl_array(A, A)
-    out, _ = sg.spgemm_spz(A, A, R=16, impl="xla", driver="fused")
+    out, _ = sg.spgemm_spz(A, A, R=16, backend="xla", driver="fused")
     o_indptr, o_idx, _ = _csr_arrays(oracle)
     f_indptr, f_idx, _ = _csr_arrays(out)
     np.testing.assert_array_equal(o_indptr, f_indptr)
@@ -121,7 +121,7 @@ def test_registry_has_fused_engines():
 
 def test_dispatch_spz_fused_engine():
     A = random_sparse(48, 48, 0.04, seed=2)
-    out, stats = dp.spgemm(A, A, engine="spz-fused", R=16, impl="xla",
+    out, stats = dp.spgemm(A, A, engine="spz-fused", R=16, backend="xla",
                            return_stats=True)
     np.testing.assert_allclose(_dense(out), _dense(sg.spgemm_scl_array(A, A)),
                                rtol=1e-4, atol=1e-4)
@@ -155,14 +155,14 @@ def _sorted_unique_partition(rng, N, L, key_hi):
 
 
 def test_merge_partitions_equals_host_merge_round():
-    """The while-loop primitive must reproduce the host _merge_round
+    """The while-loop primitive must reproduce the host merge_round
     byte-for-byte, including the mszip issue count."""
     rng = np.random.default_rng(7)
     N, L, R = 6, 32, 8
     ka, va, la = _sorted_unique_partition(rng, N, L, 3 * L)
     kb, vb, lb = _sorted_unique_partition(rng, N, L, 3 * L)
     stats = sg.SpzStats()
-    hk, hv, hl = sg._merge_round((ka, va, la.astype(np.int64)),
+    hk, hv, hl = sg.merge_round((ka, va, la.astype(np.int64)),
                                  (kb, vb, lb.astype(np.int64)),
                                  R, "xla", stats)
     fk, fv, fl, cnt = kvstream.merge_partitions(ka, va, la, kb, vb, lb, R=R)
@@ -284,7 +284,7 @@ if HAVE_HYPOTHESIS:
     @given(fused_matrix())
     def test_prop_fused_equals_oracle(A):
         want = _dense(sg.spgemm_scl_array(A, A))
-        got = _dense(sg.spgemm_spz(A, A, R=8, impl="xla",
+        got = _dense(sg.spgemm_spz(A, A, R=8, backend="xla",
                                    driver="fused")[0])
         np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
