@@ -46,6 +46,47 @@ def load_sections(path: str, sections: list[str] | None) -> dict[str, dict]:
     return out
 
 
+def load_availability(path: str,
+                      sections: list[str] | None) -> dict[tuple, float]:
+    """Map (section, row name) -> availability for rows whose ``derived``
+    field carries an ``availability=<frac>`` entry (the serve chaos
+    rows).  These compare on the fraction, not the timing."""
+    out: dict[tuple, float] = {}
+    for fn in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        try:
+            with open(fn) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            continue
+        section = data.get("section") or \
+            os.path.basename(fn)[len("BENCH_"):-len(".json")]
+        if sections and section not in sections:
+            continue
+        for r in data.get("rows", []):
+            for part in str(r.get("derived", "")).split("|"):
+                if part.startswith("availability="):
+                    try:
+                        out[(section, r["name"])] = float(
+                            part.split("=", 1)[1])
+                    except ValueError:
+                        pass
+    return out
+
+
+def compare_availability(base: dict[tuple, float], cur: dict[tuple, float],
+                         *, floor: float) -> list[tuple]:
+    """[(section, row, base_avail, cur_avail)] rows now under the floor.
+
+    Availability is a success fraction, so the gate is an absolute floor
+    rather than a ratio: a row that met the floor in the baseline and
+    dropped below it in the current run is flagged."""
+    drops = []
+    for key in sorted(set(base) & set(cur)):
+        if cur[key] < floor <= base[key]:
+            drops.append((*key, base[key], cur[key]))
+    return drops
+
+
 def compare(base: dict[str, dict], cur: dict[str, dict], *,
             threshold: float, min_us: float) -> list[tuple]:
     """Return [(section, row, base_us, cur_us, ratio)] regressions."""
@@ -85,6 +126,10 @@ def main() -> int:
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore rows below this many microseconds on both "
                          "sides (noise floor, default 50)")
+    ap.add_argument("--availability-floor", type=float, default=0.99,
+                    help="flag serve chaos rows whose availability "
+                         "fraction falls below this floor (default 0.99; "
+                         "always warn-only)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on regressions (default: warn only)")
     args = ap.parse_args()
@@ -105,6 +150,16 @@ def main() -> int:
     for section, name, b, c, ratio in regressions:
         print(f"REGRESSION {section}: {name} {b:.1f}us -> {c:.1f}us "
               f"({ratio:.2f}x)")
+    # availability rows (serve chaos) compare on the success fraction,
+    # warn-only: flaky runner scheduling can cost a dead letter or two
+    # without the resilience layer having regressed
+    drops = compare_availability(
+        load_availability(args.baseline, args.sections or None),
+        load_availability(args.current, args.sections or None),
+        floor=args.availability_floor)
+    for section, name, b, c in drops:
+        print(f"AVAILABILITY DROP {section}: {name} {b:.4f} -> {c:.4f} "
+              f"(floor {args.availability_floor:.2f}, warn-only)")
     if not regressions:
         print("no regressions")
         return 0

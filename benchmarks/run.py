@@ -384,6 +384,36 @@ def serve_bench(fast=False):
           f"hit_rate={steady['plan_hit_rate']:.2f}|"
           f"flushes={steady['n_flushes']}|buckets={steady['n_buckets']}")
 
+    # -- chaos phase: same traffic under a 10% kernel-fault rate plus a
+    # one-shot worker kill; the availability row is the PR-6 resilience
+    # gate (>= 0.99 expected: retries + worker re-bucketing + isolation)
+    from repro.distributed.spgemm_shard import kill_worker_spec
+    from repro.runtime import faultinject as fi
+    n_chaos = 48 if fast else 120
+    chaos_service = SpGemmService(
+        max_batch=8, flush_timeout=0.05, engine="auto", cache=cache,
+        policy=dp.RetryPolicy(max_attempts=3, backoff_base_s=0.0))
+    t2 = time.perf_counter()
+    with fi.injected(fi.FaultSpec(site="kernel.batched", kind="raise",
+                                  rate=0.10),
+                     kill_worker_spec(0), seed=7):
+        for A, B in make_traffic(n_chaos, seed=1):
+            chaos_service.submit(A, B)
+            chaos_service.pump()
+        chaos_service.drain()
+    t_chaos = time.perf_counter() - t2
+    cs = chaos_service.stats()
+    _emit("serve.chaos.availability", t_chaos / max(1, n_chaos),
+          f"reqs={n_chaos}|availability={cs.get('availability', 1.0):.4f}|"
+          f"dead_letters={cs['n_dead_letters']}|degraded={cs['n_degraded']}|"
+          f"retry_flush_rate={cs.get('flush_retry_rate', 0.0):.2f}")
+    degraded_p50 = cs.get("p50_latency_degraded_s",
+                          cs.get("p50_latency_s", 0.0))
+    _emit("serve.chaos.degraded", degraded_p50,
+          f"n_degraded={cs['n_degraded']}|"
+          f"p50_planned_us={cs.get('p50_latency_s', 0.0) * 1e6:.1f}|"
+          f"p50_degraded_us={degraded_p50 * 1e6:.1f}")
+
 
 ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,
        "fig11": fig11, "table4": table4, "moe": moe_bench,

@@ -54,8 +54,9 @@ import jax.numpy as jnp
 # reach the module once the package is initialized.
 from repro.core import spgemm as sg
 from repro.core.formats import (BatchedCSR, CSR, batch_csr, csr_from_coo,
-                                csr_to_numpy)
+                                csr_to_numpy, validate_operands)
 from repro.kernels import backend as kb
+from repro.runtime import faultinject as fi
 
 try:  # best-effort file locking for the autotune-cache flush
     import fcntl
@@ -272,6 +273,11 @@ def cache_key(A: CSR, B: CSR, backend: Optional[str] = None) -> str:
     return key if backend in (None, "auto") else f"{key}|bk={backend}"
 
 
+# quarantine records ride in the same JSON file under a reserved key
+# prefix (shape keys are "<rows>x<cols>@..." strings, so no collision)
+_QUAR_PREFIX = "!quarantine:"
+
+
 class AutotuneCache:
     """Disk-backed map cache_key -> {engine, source[, backend]}.
 
@@ -343,6 +349,53 @@ class AutotuneCache:
             self.version += 1
         self._flush()
 
+    # -- quarantine: poisoned (engine, backend) combos per shape bucket --
+
+    @staticmethod
+    def _combo(engine: str, backend: Optional[str]) -> str:
+        return f"{engine}|{backend or ''}"
+
+    def quarantine(self, key: str, engine: str,
+                   backend: Optional[str] = None,
+                   reason: str = "") -> None:
+        """Mark (engine, backend) poisoned for this shape bucket.
+
+        A kernel that crashes (or returns garbage) for a bucket must not
+        be re-selected on the next plan: quarantined combos are skipped
+        by cache hits, heuristic selection, and autotune sweeps.  With
+        ``backend=None`` the engine is poisoned for every backend."""
+        entries = self._load()
+        qk = _QUAR_PREFIX + key
+        q = entries.setdefault(qk, {"combos": []})
+        combo = self._combo(engine, backend)
+        if combo not in q["combos"]:
+            q["combos"].append(combo)
+        if reason:
+            q.setdefault("reasons", {})[combo] = reason
+        # a selection entry routing to the poisoned combo is dropped so
+        # the next plan re-selects among healthy candidates
+        sel = entries.get(key)
+        if sel is not None and sel.get("engine") == engine and \
+                backend in (None, sel.get("backend")):
+            entries.pop(key)
+        self.version += 1  # invalidate memoized plans
+        self._flush()
+
+    def is_quarantined(self, key: str, engine: str,
+                       backend: Optional[str] = None) -> bool:
+        q = self._load().get(_QUAR_PREFIX + key)
+        if not q:
+            return False
+        combos = set(q.get("combos", ()))
+        return (self._combo(engine, backend) in combos
+                or self._combo(engine, None) in combos)
+
+    def quarantined(self, key: str) -> list[tuple[str, Optional[str]]]:
+        """The (engine, backend) combos quarantined for a bucket."""
+        q = self._load().get(_QUAR_PREFIX + key, {})
+        return [(c.split("|", 1)[0], c.split("|", 1)[1] or None)
+                for c in q.get("combos", ())]
+
     def _lock_file(self):
         """Open + exclusively lock ``<path>.lock``; None when unavailable.
 
@@ -365,22 +418,50 @@ class AutotuneCache:
         try:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
             lock = self._lock_file()
+            fi.fire("autotune.flush", path=self.path)
             # read-merge-write: keep entries concurrent processes flushed
             # since we loaded; their measured plans beat our heuristics
+            # (quarantine records merge by union — a combo poisoned by
+            # any process stays poisoned)
             disk = self._read_disk() or {}
             for k, v in disk.items():
                 ours = self._entries.get(k)
+                if k.startswith(_QUAR_PREFIX):
+                    if ours is None:
+                        self._entries[k] = v
+                    else:
+                        for c in v.get("combos", ()):
+                            if c not in ours["combos"]:
+                                ours["combos"].append(c)
+                    continue
                 if ours is None or (v.get("source") == "autotune"
                                     and ours.get("source") != "autotune"):
                     self._entries[k] = v
+            # the merge may have resurrected a selection this process
+            # just quarantined (its stale disk entry merged back in):
+            # sweep selections routing to poisoned combos
+            for qk, q in list(self._entries.items()):
+                if not qk.startswith(_QUAR_PREFIX):
+                    continue
+                sk = qk[len(_QUAR_PREFIX):]
+                sel = self._entries.get(sk)
+                if sel is None:
+                    continue
+                combos = set(q.get("combos", ()))
+                if (self._combo(sel.get("engine", ""), sel.get("backend"))
+                        in combos
+                        or self._combo(sel.get("engine", ""), None)
+                        in combos):
+                    self._entries.pop(sk, None)
             fd, tmp = tempfile.mkstemp(
                 dir=os.path.dirname(self.path) or ".",
                 prefix=os.path.basename(self.path) + ".tmp.")
             with os.fdopen(fd, "w") as f:
                 json.dump(self._entries, f, indent=0, sort_keys=True)
             os.replace(tmp, self.path)
-        except OSError:
+        except Exception:
             # cache is an optimization; never fail the multiply over it
+            # (OSError, a scribbled-on file, or an injected write fault)
             if tmp is not None:
                 try:
                     os.unlink(tmp)
@@ -422,6 +503,7 @@ def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1,
     kw = {"backend": backend} if backend is not None else {}
     best = math.inf
     for _ in range(repeat):
+        fi.fire("dispatch.measure", engine=spec.name, backend=backend)
         t0 = time.perf_counter()
         out = spec.fn(A, B, **kw)
         if spec.returns_stats:
@@ -516,6 +598,34 @@ def _sorted_kwargs(kw: dict) -> tuple:
     return tuple(sorted(kw.items()))
 
 
+def _plan_backend_name(engine: str, backend: str) -> Optional[str]:
+    """The backend name a plan for ``engine`` would resolve ``backend``
+    to — for quarantine checks *before* the plan is built.  None for
+    non-backend-aware engines or unknown requests."""
+    spec = _REGISTRY.get(engine)
+    if spec is None or not spec.backend_aware:
+        return None
+    try:
+        return kb.resolve_backend(backend).name
+    except ValueError:
+        return None
+
+
+def _dequarantine(selected: str, key: str, backend: str,
+                  cache: "AutotuneCache") -> tuple[str, bool]:
+    """If the selected engine is quarantined for this bucket, walk the
+    degradation order to the first healthy engine.  Returns
+    (engine, was_remapped)."""
+    if not cache.is_quarantined(key, selected,
+                                _plan_backend_name(selected, backend)):
+        return selected, False
+    for eng, _ in DEGRADE_CHAIN:
+        if eng != selected and not cache.is_quarantined(
+                key, eng, _plan_backend_name(eng, backend)):
+            return eng, True
+    return selected, False  # everything poisoned: keep the original pick
+
+
 def _resolve_plan_backend(spec: EngineSpec, backend: str,
                           cached: Optional[str], kw: dict, *,
                           strict: bool = True) -> tuple[Optional[str], dict]:
@@ -599,24 +709,49 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
                 return hit
         except TypeError:  # unhashable kwarg value: skip the memo
             memo_extra = None
+    # structural screen sits behind the memo: repeat plans on validated
+    # operands (the serving steady state) skip the O(nnz) host checks
+    validate_operands(A, B)
     key = cache_key(A, B, backend=backend)
     selected, source, rule, sel_bk = engine, "explicit", None, None
     if engine == "auto":
         hit = cache.get(key) if use_cache else None
+        if hit is not None and cache.is_quarantined(
+                key, hit["engine"], hit.get("backend")):
+            hit = None  # a poisoned prior selection must not be replayed
         if hit is not None and (hit["source"] == "autotune" or not autotune):
             selected, source = hit["engine"], "cache"
             sel_bk = hit.get("backend")
         elif autotune:
-            timings = {(name, bk_name): _measure(get_engine(name), A, B,
-                                                 backend=bk_name)
-                       for name, bk_name in _measure_candidates(backend)}
-            (selected, sel_bk), source = \
-                min(timings, key=timings.get), "autotune"
-            cache.put(key, selected, "autotune", backend=sel_bk)
+            timings: dict[tuple, float] = {}
+            for name, bk_name in _measure_candidates(backend):
+                if cache.is_quarantined(key, name, bk_name):
+                    continue
+                try:
+                    timings[(name, bk_name)] = _measure(
+                        get_engine(name), A, B, backend=bk_name)
+                except Exception as e:
+                    # a candidate that dies mid-sweep is quarantined and
+                    # the sweep continues — one crashing kernel must not
+                    # abort measurement of the healthy candidates
+                    cache.quarantine(key, name, bk_name,
+                                     reason=f"{type(e).__name__}: {e}")
+            if timings:
+                (selected, sel_bk), source = \
+                    min(timings, key=timings.get), "autotune"
+                cache.put(key, selected, "autotune", backend=sel_bk)
+            else:  # nothing measurable survived: heuristic fallback
+                selected, rule = choose_engine(extract_features(A, B), rules)
+                selected, _ = _dequarantine(selected, key, backend, cache)
+                source = "heuristic"
         else:
             selected, rule = choose_engine(extract_features(A, B), rules)
             source = "heuristic"
             if use_cache:
+                remapped, was_q = _dequarantine(selected, key, backend,
+                                                cache)
+                if was_q:
+                    selected, rule = remapped, "quarantine-fallback"
                 cache.put(key, selected, "heuristic")
     spec = get_engine(selected)
     resolved = _filter_kwargs(spec.fn, kw) if engine == "auto" else kw
@@ -650,9 +785,200 @@ def execute(p: ExecutionPlan, A: CSR, B: CSR, *,
             f"plan/operand mismatch: planned {p.a_shape} @ {p.b_shape}, "
             f"got {A.shape} @ {B.shape}")
     spec = get_engine(p.engine)
+    fi.fire("dispatch.execute", engine=p.engine, backend=p.backend)
     out = spec.fn(A, B, **p.kwargs_dict)
     out, stats = out if spec.returns_stats else (out, None)
+    out = fi.corrupt("dispatch.execute", out,
+                     engine=p.engine, backend=p.backend)
     return (out, stats) if return_stats else out
+
+
+# ---------------------------------------------------------------------------
+# failure policies: deadline + retry + graceful degradation
+# ---------------------------------------------------------------------------
+
+# The degradation ladder (the serving analogue of the RISC-V SpGEMM
+# fallback-to-scalar path): planned engine/backend first, then the
+# device-resident zipper pipeline pinned to the XLA kernel tier, then
+# the dense-accumulator reference oracle — slower every step, but each
+# step removes a class of failure (autotuned exotic kernels, Pallas
+# lowering, vectorized streaming) until only plain per-row accumulation
+# remains.
+DEGRADE_CHAIN: tuple[tuple[str, Optional[str]], ...] = (
+    ("spz-fused", "xla"),
+    ("esc", None),
+    ("scl-array", None),
+)
+
+
+class CorruptOutput(RuntimeError):
+    """An engine returned structurally invalid output (non-finite values
+    or out-of-range indices) without raising — e.g. a kernel that
+    silently produced garbage.  The resilience layer treats this exactly
+    like a crash: retry, then degrade."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A resilient execution ran past its per-request deadline."""
+
+
+class ExhaustedFallbacks(RuntimeError):
+    """Every tier of the degradation ladder failed; ``report`` carries
+    the per-attempt error trail."""
+
+    def __init__(self, message: str, report: "ExecutionReport"):
+        self.report = report
+        super().__init__(message)
+
+
+def check_result(out: CSR) -> None:
+    """Structural screen of an engine's output: non-finite payloads or
+    out-of-range column indices raise :class:`CorruptOutput` so the
+    degradation ladder treats silent garbage as a failed attempt rather
+    than serving it."""
+    indptr = np.asarray(out.indptr)
+    nnz = int(indptr[-1])
+    if nnz == 0:
+        return
+    data = np.asarray(out.data)[:nnz]
+    if not np.isfinite(data).all():
+        raise CorruptOutput(f"non-finite values in output ({nnz} nnz)")
+    idx = np.asarray(out.indices)[:nnz]
+    if int(idx.min()) < 0 or int(idx.max()) >= out.n_cols:
+        raise CorruptOutput(
+            f"output column index out of range [0, {out.n_cols})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Failure policy for the resilient execute path.
+
+    max_attempts:   attempts per tier (first try included).
+    backoff_base_s / backoff_factor: deterministic exponential backoff
+                    between same-tier retries (no jitter — chaos tests
+                    assert exact schedules).
+    deadline_s:     total budget measured on ``clock`` from the first
+                    attempt; None disables the deadline.
+    fallback:       (engine, backend) tiers walked after the planned
+                    tier exhausts its retries (``DEGRADE_CHAIN``).
+    verify_output:  run :func:`check_result` on every result so silent
+                    garbage counts as a failure.
+    sleep / clock:  injectable for deterministic tests."""
+
+    max_attempts: int = 3
+    backoff_base_s: float = 0.005
+    backoff_factor: float = 4.0
+    deadline_s: Optional[float] = None
+    fallback: tuple = DEGRADE_CHAIN
+    verify_output: bool = True
+    sleep: Callable[[float], None] = time.sleep
+    clock: Callable[[], float] = time.monotonic
+
+    def backoff_s(self, retry: int) -> float:
+        """Backoff before retry number ``retry`` (1-based)."""
+        return self.backoff_base_s * self.backoff_factor ** (retry - 1)
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """What actually served a resilient execution: the tier, the attempt
+    count, and the error trail that got it there."""
+
+    tier: int                    # 0 = the planned engine/backend
+    engine: str
+    backend: Optional[str]
+    attempts: int                # total attempts across all tiers
+    errors: list = dataclasses.field(default_factory=list)
+    quarantined: list = dataclasses.field(default_factory=list)
+
+    @property
+    def degraded(self) -> bool:
+        return self.tier > 0
+
+    @property
+    def tier_label(self) -> str:
+        if self.tier == 0:
+            return "planned"
+        bk = f"/{self.backend}" if self.backend else ""
+        return f"degraded:{self.engine}{bk}"
+
+
+def fallback_plan(p: ExecutionPlan, engine: str,
+                  backend: Optional[str]) -> ExecutionPlan:
+    """Re-target a plan at a degradation tier: same operand structure,
+    fallback engine/backend, kwargs re-filtered against the new engine's
+    signature."""
+    spec = get_engine(engine)
+    kw = {k: v for k, v in p.kwargs_dict.items() if k != "backend"}
+    kw = _filter_kwargs(spec.fn, kw)
+    bk = None
+    if spec.backend_aware:
+        bk = kb.resolve_backend(backend or "auto").name
+        kw["backend"] = bk
+    return dataclasses.replace(p, engine=engine, backend=bk,
+                               kwargs=_sorted_kwargs(kw),
+                               source="fallback", rule=None)
+
+
+def execute_resilient(p: ExecutionPlan, A: CSR, B: CSR, *,
+                      policy: Optional[RetryPolicy] = None,
+                      cache: Optional[AutotuneCache] = None,
+                      return_stats: bool = False):
+    """Run a plan under the failure policy: bounded same-tier retries
+    with exponential backoff, a per-request deadline, and graceful
+    degradation down :data:`DEGRADE_CHAIN`.
+
+    Returns ``(result, report)`` (or ``((result, stats), report)`` with
+    ``return_stats``); the report records which tier actually served.
+    A tier that exhausts its retries has its (engine, backend, bucket)
+    combo quarantined in the autotune cache so the next plan for this
+    bucket does not re-select the crashing kernel.  Raises
+    :class:`ExhaustedFallbacks` when every tier fails, or
+    :class:`DeadlineExceeded` when the budget runs out first."""
+    policy = policy or RetryPolicy()
+    if cache is None:
+        cache = default_cache()
+    start = policy.clock()
+    tiers: list[tuple[str, Optional[str]]] = [(p.engine, p.backend)]
+    for eng, bk in policy.fallback:
+        if (eng, bk) != tiers[0]:
+            tiers.append((eng, bk))
+    report = ExecutionReport(tier=0, engine=p.engine, backend=p.backend,
+                             attempts=0)
+
+    def out_of_time() -> bool:
+        return (policy.deadline_s is not None
+                and policy.clock() - start >= policy.deadline_s)
+
+    for tier_i, (eng, bk) in enumerate(tiers):
+        tp = p if tier_i == 0 else fallback_plan(p, eng, bk)
+        report.tier, report.engine, report.backend = tier_i, eng, tp.backend
+        for attempt in range(1, policy.max_attempts + 1):
+            if out_of_time():
+                raise DeadlineExceeded(
+                    f"deadline {policy.deadline_s}s exceeded after "
+                    f"{report.attempts} attempts "
+                    f"(errors: {report.errors})")
+            report.attempts += 1
+            try:
+                out = execute(tp, A, B, return_stats=return_stats)
+                if policy.verify_output:
+                    check_result(out[0] if return_stats else out)
+                return out, report
+            except Exception as e:
+                report.errors.append(
+                    f"{tp.engine}/{tp.backend or '-'}#{attempt}: "
+                    f"{type(e).__name__}: {e}")
+                if attempt < policy.max_attempts and not out_of_time():
+                    policy.sleep(policy.backoff_s(attempt))
+        # tier exhausted: poison this combo for the bucket so replanning
+        # does not walk straight back into the crashing kernel
+        cache.quarantine(p.cache_key, eng, tp.backend,
+                         reason=report.errors[-1])
+        report.quarantined.append((eng, tp.backend))
+    raise ExhaustedFallbacks(
+        f"all {len(tiers)} tiers failed after {report.attempts} attempts "
+        f"(errors: {report.errors})", report)
 
 
 def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
@@ -702,6 +1028,7 @@ def _esc_batched(A: BatchedCSR, B: BatchedCSR,
                  cap_products: Optional[int] = None) -> list:
     """One-compilation ESC over a batch: shared power-of-two product
     capacity so ragged batches of similar size reuse the same XLA plan."""
+    fi.fire("kernel.batched", engine="esc", lanes=A.batch)
     if cap_products is None:
         works = [int(sg.row_work(a, B[i]).sum()) for i, a in A.lanes()]
         cap_products = _pow2_at_least(max(works + [1]))
@@ -727,6 +1054,7 @@ def _spz_batched(A: BatchedCSR, B: BatchedCSR, *, R: int = 16,
     S = S or 32 * R
     if driver not in ("fused", "host"):
         raise ValueError(f"unknown spz driver {driver!r}; use 'fused'|'host'")
+    fi.fire("kernel.batched", engine="spz", driver=driver, lanes=A.batch)
     bk = kb.resolve_backend(backend)  # unknown names raise, listing all
     stats = sg.SpzStats()
     lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
@@ -852,6 +1180,9 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
         if cache is None:
             cache = default_cache()
         hit = cache.get(key) if use_cache else None
+        if hit is not None and cache.is_quarantined(
+                key, hit["engine"], hit.get("backend")):
+            hit = None  # a poisoned prior selection must not be replayed
         if hit is not None:
             selected, source = hit["engine"], "cache"
             sel_bk = hit.get("backend")
@@ -860,6 +1191,11 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
                 extract_features(A[i_heavy], B[i_heavy]), rules)
             source = "heuristic"
             if use_cache:
+                remapped_q, was_q = _dequarantine(
+                    _BATCH_FALLBACK.get(selected, selected), key, backend,
+                    cache)
+                if was_q:
+                    selected, rule = remapped_q, "quarantine-fallback"
                 cache.put(key, selected, "heuristic")
     remapped = _BATCH_FALLBACK.get(selected, selected)
     spec = get_engine(remapped)
@@ -912,7 +1248,10 @@ def execute_batched(p: ExecutionPlan, A: BatchedCSR,
         raise ValueError(
             f"plan/operand mismatch: planned {p.batch}x{p.a_shape} @ "
             f"{p.b_shape}, got {A.batch}x{A.shape} @ {B.shape}")
+    fi.fire("dispatch.execute_batched", engine=p.engine, backend=p.backend)
     outs = _BATCH_DRIVERS[p.engine](A, B, **p.kwargs_dict)
+    outs = fi.corrupt("dispatch.execute_batched", outs,
+                      engine=p.engine, backend=p.backend)
     return assemble_batched(outs, A, B)
 
 

@@ -20,6 +20,78 @@ import numpy as np
 EMPTY = np.int32(np.iinfo(np.int32).max)
 
 
+class InvalidOperand(ValueError):
+    """Structured rejection of a malformed sparse operand.
+
+    Raised at the service/dispatch boundary instead of letting a
+    non-monotonic ``indptr`` or out-of-range column index flow into a
+    kernel, where it produces garbage output or an opaque XLA crash.
+    ``field`` names the offending piece (e.g. ``"A.indptr"``)."""
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        super().__init__(f"{field}: {message}")
+
+
+def validate_csr(m: "CSR", name: str = "operand") -> None:
+    """Screen a padded CSR for structural corruption; raise
+    :class:`InvalidOperand` naming the bad field, or return None.
+
+    Checks (in order): field dtypes, indptr shape/monotonicity/range
+    against ``nnz_cap``, column indices within ``[0, n_cols)`` over the
+    valid region, and finite values.  Cost is O(nnz) host work — paid
+    once per request at the intake boundary, not per plan/execute."""
+    if len(m.shape) != 2 or m.shape[0] < 1 or m.shape[1] < 1:
+        raise InvalidOperand(f"{name}.shape", f"not a matrix shape: {m.shape}")
+    indptr = np.asarray(m.indptr)
+    if indptr.dtype.kind not in "iu":
+        raise InvalidOperand(f"{name}.indptr",
+                             f"expected integer dtype, got {indptr.dtype}")
+    if indptr.ndim != 1 or indptr.shape[0] != m.n_rows + 1:
+        raise InvalidOperand(
+            f"{name}.indptr",
+            f"expected shape ({m.n_rows + 1},), got {indptr.shape}")
+    if int(indptr[0]) != 0:
+        raise InvalidOperand(f"{name}.indptr",
+                             f"must start at 0, got {int(indptr[0])}")
+    if (np.diff(indptr) < 0).any():
+        drop = int(np.argmax(np.diff(indptr) < 0))
+        raise InvalidOperand(f"{name}.indptr",
+                             f"non-monotonic at row {drop}")
+    indices = np.asarray(m.indices)
+    if indices.dtype.kind not in "iu":
+        raise InvalidOperand(f"{name}.indices",
+                             f"expected integer dtype, got {indices.dtype}")
+    data = np.asarray(m.data)
+    if data.dtype.kind != "f":
+        raise InvalidOperand(f"{name}.data",
+                             f"expected floating dtype, got {data.dtype}")
+    if indices.shape != data.shape or indices.ndim != 1:
+        raise InvalidOperand(
+            f"{name}.indices",
+            f"indices/data capacity mismatch: {indices.shape} vs {data.shape}")
+    nnz = int(indptr[-1])
+    if nnz > m.nnz_cap:
+        raise InvalidOperand(f"{name}.indptr",
+                             f"nnz {nnz} exceeds capacity {m.nnz_cap}")
+    live_idx = indices[:nnz]
+    if nnz and (int(live_idx.min()) < 0 or int(live_idx.max()) >= m.n_cols):
+        bad = int(live_idx[(live_idx < 0) | (live_idx >= m.n_cols)][0])
+        raise InvalidOperand(f"{name}.indices",
+                             f"column {bad} out of range [0, {m.n_cols})")
+    if nnz and not np.isfinite(data[:nnz]).all():
+        raise InvalidOperand(f"{name}.data", "non-finite value in payload")
+
+
+def validate_operands(A: "CSR", B: "CSR") -> None:
+    """Validate both sides of a multiply (see :func:`validate_csr`)."""
+    validate_csr(A, "A")
+    validate_csr(B, "B")
+    if A.n_cols != B.n_rows:
+        raise InvalidOperand("B.shape",
+                             f"inner dims differ: {A.shape} @ {B.shape}")
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class CSR:

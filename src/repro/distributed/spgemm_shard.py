@@ -38,6 +38,31 @@ from repro.core import dispatch as dp
 from repro.core import spgemm_engines as sg
 from repro.core.formats import EMPTY, BatchedCSR, csr_from_coo
 from repro.launch.mesh import make_lane_mesh
+from repro.runtime import faultinject as fi
+
+
+class WorkerLost(RuntimeError):
+    """A shard worker (one device's lane group) died mid-flush.
+
+    Raised by the ``shard.worker`` fault site in chaos tests, and the
+    exception a real multi-host transport would surface on a lost peer.
+    The executors below treat it as recoverable: the dead worker's lanes
+    are re-run on a surviving device (see :func:`_execute_groups`)."""
+
+    def __init__(self, device: int, message: str = ""):
+        self.device = device
+        super().__init__(message or f"shard worker {device} lost")
+
+
+def kill_worker_spec(device: int, *, rate: float = 1.0,
+                     max_fires: Optional[int] = 1) -> fi.FaultSpec:
+    """A :class:`~repro.runtime.faultinject.FaultSpec` that kills shard
+    worker ``device`` (default: once) — the chaos-test building block."""
+    return fi.FaultSpec(
+        site="shard.worker", kind="raise", rate=rate, max_fires=max_fires,
+        match={"device": device},
+        exc_factory=lambda site, ctx: WorkerLost(
+            ctx.get("device", device), "injected worker kill"))
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +196,9 @@ def _execute_esc_sharded(sp: ShardPlan, A: BatchedCSR, B: BatchedCSR) -> list:
     if unknown:  # parity with the strict-kwargs single-device driver
         raise TypeError(f"esc sharded path got unexpected kwargs {unknown}")
     Ap, Bp = _permute_to_slots(A, sp), _permute_to_slots(B, sp)
+    # the shard_map launch is the batched kernel for this flush: same
+    # fault site as the per-group drivers in _execute_groups
+    fi.fire("kernel.batched", engine="esc", lanes=A.batch)
     cap = kw["cap_products"]
     fn = _sharded_esc_fn(sp.mesh, cap, A.n_rows, B.n_cols)
     r, c, v, valid, _ = fn(Ap.indptr, Ap.indices, Ap.data,
@@ -191,24 +219,64 @@ def _lane_select(A: BatchedCSR, idx: np.ndarray) -> BatchedCSR:
                       A.valid[idx], A.shape)
 
 
-def _execute_groups(sp: ShardPlan, A: BatchedCSR, B: BatchedCSR) -> list:
+def _execute_groups(sp: ShardPlan, A: BatchedCSR, B: BatchedCSR, *,
+                    dead: Optional[set] = None,
+                    max_worker_restarts: int = 3) -> list:
     """Host-orchestrated engines: run one device group at a time through
-    the batched driver (same plan kwargs, so same static shapes)."""
+    the batched driver (same plan kwargs, so same static shapes).
+
+    Worker supervision (the serving-flush generalization of
+    ``runtime/fault.py::run_resilient``'s restart loop): a device group
+    whose worker dies (:class:`WorkerLost` — injected via the
+    ``shard.worker`` fault site, or a real transport error) marks that
+    device dead and collects its lanes; after the first pass, lost lanes
+    are re-run on a surviving device, with bounded restarts.  Because
+    per-stream payloads are independent of which streams share a kernel
+    issue, re-running a lane group elsewhere is bit-identical to the
+    uninterrupted flush."""
     driver = dp.get_batch_driver(sp.base.engine)
     kw = sp.base.kwargs_dict
     slots = np.asarray(sp.slot_of_lane)
     outs: list = [None] * A.batch
     lane_ok = np.asarray(A.valid) & np.asarray(B.valid)
+    dead = set() if dead is None else set(dead)
+
+    def run(lanes: list, device: int) -> None:
+        fi.fire("shard.worker", device=device, engine=sp.base.engine)
+        idx = np.asarray(lanes)
+        sub = driver(_lane_select(A, idx), _lane_select(B, idx), **kw)
+        for j, i in enumerate(lanes):
+            outs[i] = sub[j]
+
+    lost: list = []
     for d in range(sp.n_dev):
         lo, hi = d * sp.lanes_per_dev, (d + 1) * sp.lanes_per_dev
         lanes = [i for i in range(A.batch)
                  if lo <= slots[i] < hi and lane_ok[i]]
         if not lanes:
             continue
-        idx = np.asarray(lanes)
-        sub = driver(_lane_select(A, idx), _lane_select(B, idx), **kw)
-        for j, i in enumerate(lanes):
-            outs[i] = sub[j]
+        if d in dead:
+            lost.extend(lanes)
+            continue
+        try:
+            run(lanes, d)
+        except WorkerLost:
+            dead.add(d)
+            lost.extend(lanes)
+    restarts = 0
+    while lost:
+        alive = [d for d in range(sp.n_dev) if d not in dead]
+        if not alive or restarts >= max_worker_restarts:
+            raise WorkerLost(
+                -1, f"{len(lost)} lanes unrecovered after {restarts} "
+                    f"restarts ({sp.n_dev - len(alive)}/{sp.n_dev} "
+                    f"workers dead)")
+        restarts += 1
+        try:
+            run(lost, alive[0])
+            lost = []
+        except WorkerLost:
+            dead.add(alive[0])
     return outs
 
 
@@ -224,7 +292,17 @@ def execute_sharded(sp: ShardPlan, A: BatchedCSR,
             f"{sp.base.a_shape} @ {sp.base.b_shape}, got "
             f"{A.batch}x{A.shape} @ {B.shape}")
     if sp.base.engine == "esc":
-        outs = _execute_esc_sharded(sp, A, B)
+        try:
+            # the shard_map launch spans every device: fire the worker
+            # site per participant so a kill spec matched on any device
+            # id takes the whole launch down (one computation)
+            for d in range(sp.n_dev):
+                fi.fire("shard.worker", device=d, engine="esc")
+            outs = _execute_esc_sharded(sp, A, B)
+        except WorkerLost as e:
+            # recover by re-running lane groups per device through the
+            # batched driver, skipping the dead worker
+            outs = _execute_groups(sp, A, B, dead={e.device})
     else:
         outs = _execute_groups(sp, A, B)
     return dp.assemble_batched(outs, A, B)

@@ -9,10 +9,18 @@ autotune outcomes.
   PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200
   PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 400 \\
       --max-batch 8 --timeout 0.05 --engine auto --verify
+
+Chaos mode injects kernel faults (and optionally a worker kill) while
+serving, and reports availability, degraded-tier traffic, and the
+dead-letter queue:
+
+  PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
+      --inject-rate 0.1 --kill-worker 0 --deadline 30 --max-attempts 3
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import tempfile
 import time
@@ -21,6 +29,8 @@ import numpy as np
 
 from repro.core import dispatch as dp
 from repro.core.formats import random_sparse
+from repro.distributed.spgemm_shard import kill_worker_spec
+from repro.runtime import faultinject as fi
 from repro.serving.spgemm_service import SpGemmService
 
 # (n, density, pattern) mix spanning the heuristic table's regimes
@@ -67,13 +77,38 @@ def main() -> None:
                          "visible)")
     ap.add_argument("--verify", action="store_true",
                     help="check every result against the scl-array oracle")
+    ap.add_argument("--inject-rate", type=float, default=0.0,
+                    help="probability a batched kernel launch raises an "
+                         "injected fault (chaos mode)")
+    ap.add_argument("--kill-worker", type=int, default=None, metavar="DEV",
+                    help="kill shard worker DEV once, mid-serve")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline, seconds (expired requests "
+                         "dead-letter)")
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="per-flush attempts on the planned tier before "
+                         "walking the degradation ladder")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault-injection RNG")
     args = ap.parse_args()
 
     cache = dp.AutotuneCache(args.cache or os.path.join(
         tempfile.mkdtemp(prefix="serve_spgemm_"), "autotune.json"))
+    policy = dp.RetryPolicy(max_attempts=args.max_attempts,
+                            deadline_s=args.deadline)
     service = SpGemmService(max_batch=args.max_batch,
                             flush_timeout=args.timeout,
-                            engine=args.engine, cache=cache)
+                            engine=args.engine, cache=cache,
+                            policy=policy)
+
+    specs = []
+    if args.inject_rate > 0.0:
+        specs.append(fi.FaultSpec(site="kernel.batched", kind="raise",
+                                  rate=args.inject_rate))
+    if args.kill_worker is not None:
+        specs.append(kill_worker_spec(args.kill_worker))
+    chaos = fi.injected(*specs, seed=args.chaos_seed) if specs \
+        else contextlib.nullcontext()
     traffic = make_traffic(args.requests, seed=args.seed)
     warmup = args.warmup if args.warmup is not None else args.requests // 4
 
@@ -82,15 +117,17 @@ def main() -> None:
           f"{args.max_batch}, timeout={args.timeout}s)")
     t0 = time.perf_counter()
     snap = (0, 0)
-    for i, (A, B) in enumerate(traffic):
-        service.submit(A, B)
-        service.pump()
-        if i + 1 == warmup:
-            # close out the warmup window: flush the partial buckets so
-            # every bucket's plan is cached before the steady-state clock
-            service.drain()
-            snap = (len(service.completed), len(service.flush_log))
-    service.drain()
+    with chaos:
+        for i, (A, B) in enumerate(traffic):
+            service.submit(A, B)
+            service.pump()
+            if i + 1 == warmup:
+                # close out the warmup window: flush the partial buckets
+                # so every bucket's plan is cached before the
+                # steady-state clock
+                service.drain()
+                snap = (len(service.completed), len(service.flush_log))
+        service.drain()
     wall = time.perf_counter() - t0
 
     full = service.stats()
@@ -106,6 +143,16 @@ def main() -> None:
               f"p50={s['p50_latency_s'] * 1e3:.2f}ms "
               f"p95={s['p95_latency_s'] * 1e3:.2f}ms | "
               f"plan_hit_rate={s.get('plan_hit_rate', 0.0):.2f}")
+    if args.inject_rate > 0.0 or args.kill_worker is not None:
+        tiers: dict = {}
+        for r in service.completed:
+            tiers[r.tier] = tiers.get(r.tier, 0) + 1
+        print(f"chaos: availability={full.get('availability', 1.0):.4f} "
+              f"({full['n_dead_letters']} dead-lettered, "
+              f"{full['n_degraded']} degraded) | tiers="
+              + ",".join(f"{t}x{c}" for t, c in sorted(tiers.items())))
+        for r in service.dead_letters:
+            print(f"  dead-letter: {r.error}")
     print("# per-bucket outcomes (shape, nnz pad buckets -> engines)")
     for key, b in sorted(service.bucket_outcomes().items()):
         (na, _), (nb, _), cap_a, cap_b = key

@@ -1,0 +1,14 @@
+"""Runtime resilience layer: supervised restart, elasticity, fault injection.
+
+``fault.run_resilient`` is the checkpoint/restart supervisor for
+training; ``faultinject`` is the deterministic fault-injection registry
+the SpGEMM serving stack (dispatch -> shard -> serve) threads its fault
+sites through.  The serving-side failure *policies* (retry/backoff,
+degradation ladder, quarantine) live where the execute path lives —
+``core/dispatch.py`` — and the flush supervisor in
+``serving/spgemm_service.py``.
+"""
+from repro.runtime import faultinject
+from repro.runtime.fault import FaultConfig, Preempted, run_resilient
+
+__all__ = ["FaultConfig", "Preempted", "faultinject", "run_resilient"]

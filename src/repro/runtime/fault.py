@@ -35,6 +35,29 @@ class Preempted(RuntimeError):
     """Raised by the preemption hook (tests / SIGTERM handlers)."""
 
 
+def _safe_restore(restore_fn: Callable):
+    """``restore_fn()`` hardened: a restore that *itself* raises (corrupt
+    checkpoint, unreadable dir) means "no usable checkpoint" — the
+    supervisor restarts cold instead of crashing out of the loop."""
+    try:
+        return restore_fn()
+    except Exception as e:
+        log.warning("restore failed (%s); treating as no checkpoint", e)
+        return None
+
+
+def _safe_join(pending_save) -> None:
+    """Join an async save, swallowing its failure (the checkpoint is an
+    optimization — a failed save must never take the training run down
+    or leak the pending handle)."""
+    if pending_save is None:
+        return
+    try:
+        pending_save.join()
+    except Exception as e:
+        log.warning("pending checkpoint save failed on join (%s)", e)
+
+
 def run_resilient(train_step: Callable, state: Any, batch_fn, fcfg: FaultConfig,
                   *, num_steps: int, save_fn: Callable, restore_fn: Callable,
                   preempt_hook: Optional[Callable[[int], None]] = None,
@@ -47,49 +70,68 @@ def run_resilient(train_step: Callable, state: Any, batch_fn, fcfg: FaultConfig,
     pipeline makes resumed training bitwise-identical to uninterrupted
     training; see tests/test_system.py::test_resume_bitwise_equivalence).
     save_fn(step, state); restore_fn() -> (step, state) or None.
-    Returns (state, history dict)."""
+    Returns (state, history dict).
+
+    Failure accounting: only *step* failures (exceptions out of the
+    train step, non-finite loss, preemption) count against
+    ``max_restarts``.  A ``save_fn`` that raises is logged under
+    ``hist["save_failures"]`` and training continues — a flaky
+    checkpoint disk must not burn restart budget; a ``restore_fn`` that
+    raises counts as "no checkpoint" and the restart goes back to step
+    0.  The pending async save handle is always joined, including on
+    every failure path."""
     restarts = 0
-    hist = {"steps": [], "restarts": 0, "saves": 0}
-    resumed = restore_fn()
+    hist = {"steps": [], "restarts": 0, "saves": 0, "save_failures": 0}
+    resumed = _safe_restore(restore_fn)
     step = 0
     if resumed is not None:
         step, state = resumed
         log.info("resumed at step %d", step)
     pending_save = None
-    while step < num_steps:
-        try:
-            if preempt_hook is not None:
-                preempt_hook(step)
-            batch = batch_fn(step)
-            state, metrics = train_step(state, batch)
-            loss = float(metrics.get("loss", 0.0))
-            if loss != loss:  # NaN: treat as corrupt step -> restart
-                raise FloatingPointError(f"non-finite loss at step {step}")
-            hist["steps"].append({"step": step, **{k: float(v) for k, v in metrics.items()}})
-            if on_step is not None:
-                on_step(step, metrics)
-            step += 1
-            if step % fcfg.ckpt_every == 0 or step == num_steps:
-                if pending_save is not None:
-                    pending_save.join()
-                pending_save = save_fn(step, state)
-                hist["saves"] += 1
-        except (Preempted, FloatingPointError, RuntimeError) as e:
-            restarts += 1
-            hist["restarts"] = restarts
-            if restarts > fcfg.max_restarts:
-                raise RuntimeError(
-                    f"exceeded max_restarts={fcfg.max_restarts}") from e
-            log.warning("step %d failed (%s); restarting (%d/%d)",
-                        step, e, restarts, fcfg.max_restarts)
-            if pending_save is not None:
-                pending_save.join()
+    try:
+        while step < num_steps:
+            try:
+                if preempt_hook is not None:
+                    preempt_hook(step)
+                batch = batch_fn(step)
+                state, metrics = train_step(state, batch)
+                loss = float(metrics.get("loss", 0.0))
+                if loss != loss:  # NaN: treat as corrupt step -> restart
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                hist["steps"].append(
+                    {"step": step,
+                     **{k: float(v) for k, v in metrics.items()}})
+                if on_step is not None:
+                    on_step(step, metrics)
+                step += 1
+                if step % fcfg.ckpt_every == 0 or step == num_steps:
+                    # a failed save is logged, not restarted: the step
+                    # already committed and re-running it would double
+                    # its work for a checkpoint-disk problem
+                    try:
+                        _safe_join(pending_save)
+                        pending_save = save_fn(step, state)
+                        hist["saves"] += 1
+                    except Exception as e:
+                        pending_save = None
+                        hist["save_failures"] += 1
+                        log.warning("checkpoint save at step %d failed "
+                                    "(%s); continuing", step, e)
+            except (Preempted, FloatingPointError, RuntimeError) as e:
+                restarts += 1
+                hist["restarts"] = restarts
+                if restarts > fcfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={fcfg.max_restarts}") from e
+                log.warning("step %d failed (%s); restarting (%d/%d)",
+                            step, e, restarts, fcfg.max_restarts)
+                _safe_join(pending_save)
                 pending_save = None
-            resumed = restore_fn()
-            if resumed is None:
-                step = 0
-            else:
-                step, state = resumed
-    if pending_save is not None:
-        pending_save.join()
+                resumed = _safe_restore(restore_fn)
+                if resumed is None:
+                    step = 0
+                else:
+                    step, state = resumed
+    finally:
+        _safe_join(pending_save)
     return state, hist

@@ -12,6 +12,23 @@ work-balanced sharded plan path (``distributed/spgemm_shard.py``), and
 every flush records its plan provenance — after warmup, selections come
 from the autotune cache and the plan hit rate approaches 1.
 
+**Failure model** (the resilience layer of PR 6): operands are
+structurally validated at the ``submit`` boundary
+(:class:`~repro.core.formats.InvalidOperand` names the bad field); each
+flush runs under a supervisor that retries the planned tier with
+exponential backoff, walks the degradation ladder
+(``core/dispatch.py::DEGRADE_CHAIN``) when the planned kernel keeps
+failing — quarantining the poisoned (engine, backend, bucket) combo in
+the autotune cache — and finally *isolates* per request on the
+dense-accumulator reference engine, so one poisoned request dead-letters
+alone instead of failing its whole co-bucketed batch.  Shard-worker loss
+mid-flush is recovered one layer down (``_execute_groups``'s supervisor
+re-runs the dead worker's lanes on a survivor, bit-identical).  Every
+request resolves: ``result`` on success, or a structured
+:class:`SpgemmError` on the dead-letter queue.  Per-request deadlines
+(``policy.deadline_s``, measured on the service clock from submission)
+bound how long a request may be retried before it is dead-lettered.
+
 The clock is injectable (and ``submit``/``pump`` take an explicit
 ``now``) so tests and benchmarks can drive deterministic virtual
 traffic; the CLI (``launch/serve_spgemm.py``) and the ``serve``
@@ -26,8 +43,9 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import dispatch as dp
-from repro.core.formats import CSR, batch_csr
+from repro.core.formats import CSR, batch_csr, validate_operands
 from repro.distributed import spgemm_shard as shard
+from repro.runtime import faultinject as fi
 
 
 def _pow2_bucket(n: int) -> int:
@@ -45,8 +63,27 @@ def bucket_key(A: CSR, B: CSR) -> tuple:
 
 
 @dataclasses.dataclass
+class SpgemmError:
+    """Structured failure result for one request (the dead-letter
+    payload): where it failed, why, and after how many attempts."""
+
+    id: int
+    bucket: tuple
+    stage: str        # "flush" | "isolate" | "deadline"
+    kind: str         # exception class name ("DeadlineExceeded", ...)
+    message: str
+    attempts: int
+    t: float
+
+    def __str__(self) -> str:
+        return (f"SpgemmError(request {self.id} @ {self.stage}: "
+                f"{self.kind}: {self.message})")
+
+
+@dataclasses.dataclass
 class SpGemmRequest:
-    """One queued multiply; ``result`` lands when its bucket flushes."""
+    """One queued multiply; exactly one of ``result`` / ``error`` lands
+    when its bucket flushes (or its deadline expires)."""
 
     A: CSR
     B: CSR
@@ -54,12 +91,18 @@ class SpGemmRequest:
     t_submit: float
     bucket: tuple
     result: Optional[CSR] = None
+    error: Optional[SpgemmError] = None
     t_done: Optional[float] = None
     engine: Optional[str] = None
+    tier: Optional[str] = None   # "planned" | "degraded:..." | "isolated"
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        return self.result is not None or self.error is not None
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
     @property
     def latency(self) -> float:
@@ -70,7 +113,8 @@ class SpGemmRequest:
 
 @dataclasses.dataclass
 class FlushRecord:
-    """Per-flush provenance: which bucket ran, on what plan, and why."""
+    """Per-flush provenance: which bucket ran, on what plan, why, and —
+    under failure — which tier actually served and at what cost."""
 
     bucket: tuple
     n_requests: int
@@ -79,10 +123,18 @@ class FlushRecord:
     reason: str        # "full" | "timeout" | "drain"
     t: float
     wall_s: float      # host wall-clock spent executing the flush
+    tier: str = "planned"   # "planned" | "degraded:<engine>" | "isolated"
+    attempts: int = 1       # execution attempts across tiers
+    n_failed: int = 0       # requests dead-lettered by this flush
+    errors: tuple = ()      # per-attempt error trail (str)
 
     @property
     def plan_hit(self) -> bool:
         return self.source == "cache"
+
+    @property
+    def degraded(self) -> bool:
+        return self.tier != "planned"
 
 
 class SpGemmService:
@@ -94,14 +146,19 @@ class SpGemmService:
                    partially filled.
     engine/rules/cache: forwarded to planning (``plan_sharded``).
     mesh:          lane mesh for sharded execution (default: all devices).
-    clock:         time source for submit/done stamps (injectable)."""
+    clock:         time source for submit/done stamps (injectable).
+    policy:        :class:`~repro.core.dispatch.RetryPolicy` governing
+                   per-flush retries, backoff, the degradation ladder,
+                   and the per-request deadline (``deadline_s``, taken
+                   against this service's clock)."""
 
     def __init__(self, *, max_batch: int = 8, flush_timeout: float = 0.02,
                  engine: str = "auto",
                  mesh=None,
                  cache: Optional[dp.AutotuneCache] = None,
                  rules=dp.DEFAULT_HEURISTICS,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 policy: Optional[dp.RetryPolicy] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -111,25 +168,33 @@ class SpGemmService:
         self.cache = cache if cache is not None else dp.default_cache()
         self.rules = rules
         self.clock = clock
+        self.policy = policy if policy is not None else dp.RetryPolicy()
         self._queues: dict[tuple, list[SpGemmRequest]] = {}
         self._opened: dict[tuple, float] = {}
         self._bucket_caps: dict[tuple, int] = {}
         self._next_id = 0
+        self._by_id: dict[int, SpGemmRequest] = {}
         self.completed: list[SpGemmRequest] = []
+        self.dead_letters: list[SpGemmRequest] = []
         self.flush_log: list[FlushRecord] = []
 
     # -- intake ----------------------------------------------------------
 
     def submit(self, A: CSR, B: CSR,
                now: Optional[float] = None) -> SpGemmRequest:
-        """Queue one multiply; flushes its bucket if that fills it."""
-        if A.n_cols != B.n_rows:
-            raise ValueError(f"inner dims differ: {A.shape} @ {B.shape}")
+        """Queue one multiply; flushes its bucket if that fills it.
+
+        Malformed operands are rejected *here* with a structured
+        :class:`~repro.core.formats.InvalidOperand` naming the field —
+        they never reach a kernel, and never poison a co-bucketed
+        batch."""
+        validate_operands(A, B)
         now = self.clock() if now is None else now
         key = bucket_key(A, B)
         req = SpGemmRequest(A=A, B=B, id=self._next_id, t_submit=now,
                             bucket=key)
         self._next_id += 1
+        self._by_id[req.id] = req
         q = self._queues.setdefault(key, [])
         if not q:
             self._opened[key] = now
@@ -137,6 +202,11 @@ class SpGemmService:
         if len(q) >= self.max_batch:
             self._flush(key, now, reason="full")
         return req
+
+    def lookup(self, request_id: int) -> SpGemmRequest:
+        """The request for an id — every submitted id resolves here,
+        whether it completed, dead-lettered, or is still pending."""
+        return self._by_id[request_id]
 
     @property
     def pending(self) -> int:
@@ -183,57 +253,206 @@ class SpGemmService:
         return dataclasses.replace(
             sp, base=dataclasses.replace(sp.base, kwargs=kwargs))
 
-    def _flush(self, key: tuple, now: float, reason: str) -> int:
-        reqs = self._queues.pop(key, [])
-        self._opened.pop(key, None)
-        if not reqs:
-            return 0
+    # -- failure handling ------------------------------------------------
+
+    def _dead_letter(self, r: SpGemmRequest, stage: str, kind: str,
+                     message: str, attempts: int) -> None:
+        r.error = SpgemmError(id=r.id, bucket=r.bucket, stage=stage,
+                              kind=kind, message=message, attempts=attempts,
+                              t=self.clock())
+        r.t_done = self.clock()
+        self.dead_letters.append(r)
+
+    def _expire(self, reqs: list, attempts: int) -> list:
+        """Dead-letter requests whose age passed the policy deadline;
+        returns the survivors."""
+        if self.policy.deadline_s is None:
+            return reqs
+        now = self.clock()
+        keep = []
+        for r in reqs:
+            if now - r.t_submit >= self.policy.deadline_s:
+                self._dead_letter(
+                    r, "deadline", "DeadlineExceeded",
+                    f"age {now - r.t_submit:.3f}s >= deadline "
+                    f"{self.policy.deadline_s}s", attempts)
+            else:
+                keep.append(r)
+        return keep
+
+    @staticmethod
+    def _check_outputs(out, reqs: list) -> None:
+        """Screen every lane of a flush result; silent garbage (injected
+        NaNs, out-of-range indices) counts as a failed attempt."""
+        for i in range(len(reqs)):
+            dp.check_result(out[i])
+
+    def _run_batched(self, reqs: list, key: tuple, planner) -> object:
+        """Build the padded batch for ``reqs`` and run one execution
+        attempt through ``planner(A, B) -> (plan-ish, execute_fn)``."""
         _, _, cap_a, cap_b = key
-        t0 = time.perf_counter()
         A = batch_csr([r.A for r in reqs], nnz_cap=cap_a,
                       batch_cap=self.max_batch)
         B = batch_csr([r.B for r in reqs], nnz_cap=cap_b,
                       batch_cap=self.max_batch)
-        sp = shard.plan_sharded(A, B, self.engine, mesh=self.mesh,
-                                cache=self.cache, rules=self.rules)
-        sp = self._stick_bucket_cap(key, sp)
-        out = shard.execute_sharded(sp, A, B)
+        return planner(A, B)
+
+    def _flush(self, key: tuple, now: float, reason: str) -> int:
+        """Supervised flush: planned tier with bounded retries, then the
+        degradation ladder, then per-request isolation.  Surviving
+        requests always complete; failures dead-letter individually."""
+        reqs = self._queues.pop(key, [])
+        self._opened.pop(key, None)
+        if not reqs:
+            return 0
+        fi.fire("service.flush", bucket=key, reason=reason)
+        t0 = time.perf_counter()
+        survivors = list(reqs)
+        attempts = 0
+        errors: list[str] = []
+        out = None
+        sp = None
+        engine, source, tier = "?", "failed", "planned"
+
+        # -- tier 0: the planned sharded flush, with bounded retries ----
+        for attempt in range(1, self.policy.max_attempts + 1):
+            survivors = self._expire(survivors, attempts)
+            if not survivors:
+                break
+            attempts += 1
+            try:
+                def planned(A, B):
+                    nonlocal sp
+                    sp = shard.plan_sharded(A, B, self.engine,
+                                            mesh=self.mesh,
+                                            cache=self.cache,
+                                            rules=self.rules)
+                    sp = self._stick_bucket_cap(key, sp)
+                    return shard.execute_sharded(sp, A, B)
+                out = self._run_batched(survivors, key, planned)
+                self._check_outputs(out, survivors)
+                engine, source, tier = sp.base.engine, sp.base.source, \
+                    "planned"
+                break
+            except Exception as e:
+                errors.append(f"planned#{attempt}: {type(e).__name__}: {e}")
+                out = None
+                if attempt < self.policy.max_attempts:
+                    self.policy.sleep(self.policy.backoff_s(attempt))
+
+        # -- tier 1..n: the degradation ladder --------------------------
+        if out is None and survivors:
+            if sp is not None:
+                # the planned combo kept crashing this bucket: poison it
+                # so the next plan does not re-select the same kernel
+                self.cache.quarantine(sp.base.cache_key, sp.base.engine,
+                                      sp.base.backend,
+                                      reason=errors[-1] if errors else "")
+            planned_combo = (sp.base.engine, sp.base.backend) \
+                if sp is not None else (None, None)
+            for eng, bk in self.policy.fallback:
+                if (eng, bk) == planned_combo:
+                    continue
+                spec = dp.available_engines().get(eng)
+                if spec is None or not spec.batchable:
+                    continue  # non-batchable tiers are the isolation path
+                survivors = self._expire(survivors, attempts)
+                if not survivors:
+                    break
+                attempts += 1
+                try:
+                    def degraded(A, B, eng=eng, bk=bk):
+                        bp = dp.plan_batched(A, B, engine=eng,
+                                             backend=bk or "auto",
+                                             cache=self.cache)
+                        return dp.execute_batched(bp, A, B)
+                    out = self._run_batched(survivors, key, degraded)
+                    self._check_outputs(out, survivors)
+                    engine, source = eng, "fallback"
+                    tier = f"degraded:{eng}" + (f"/{bk}" if bk else "")
+                    break
+                except Exception as e:
+                    errors.append(f"{eng}/{bk or '-'}: "
+                                  f"{type(e).__name__}: {e}")
+                    out = None
+
+        done_n = 0
+        if out is not None and survivors:
+            t_done = self.clock()
+            for i, r in enumerate(survivors):
+                r.result = out[i]
+                r.t_done = t_done
+                r.engine = engine
+                r.tier = tier
+            self.completed.extend(survivors)
+            done_n = len(survivors)
+        elif survivors:
+            # -- final tier: per-request isolation on the reference
+            # engine — one poisoned request must not sink its batch ----
+            tier, engine, source = "isolated", "scl-array", "isolated"
+            for r in survivors:
+                survivors_one = self._expire([r], attempts)
+                if not survivors_one:
+                    continue
+                attempts += 1
+                try:
+                    res = dp.spgemm(r.A, r.B, engine="scl-array",
+                                    cache=self.cache)
+                    dp.check_result(res)
+                    r.result = res
+                    r.t_done = self.clock()
+                    r.engine = engine
+                    r.tier = tier
+                    self.completed.append(r)
+                    done_n += 1
+                except Exception as e:
+                    errors.append(f"isolate#{r.id}: {type(e).__name__}: {e}")
+                    self._dead_letter(r, "isolate", type(e).__name__,
+                                      str(e), attempts)
+
         wall = time.perf_counter() - t0
-        # completion is stamped AFTER execution, so latency includes the
-        # flush's own run (and compile) time under a real clock; virtual
-        # clocks simply read whatever the test advanced them to
-        t_done = self.clock()
-        for i, r in enumerate(reqs):
-            r.result = out[i]
-            r.t_done = t_done
-            r.engine = sp.base.engine
-        self.completed.extend(reqs)
         self.flush_log.append(FlushRecord(
-            bucket=key, n_requests=len(reqs), engine=sp.base.engine,
-            source=sp.base.source, reason=reason, t=now, wall_s=wall))
-        return len(reqs)
+            bucket=key, n_requests=len(reqs), engine=engine,
+            source=source, reason=reason, t=now, wall_s=wall,
+            tier=tier, attempts=max(attempts, 1),
+            n_failed=len(reqs) - done_n, errors=tuple(errors)))
+        return done_n
 
     # -- accounting ------------------------------------------------------
 
-    def stats(self, since_request: int = 0, since_flush: int = 0) -> dict:
+    def stats(self, since_request: int = 0, since_flush: int = 0,
+              since_dead: int = 0) -> dict:
         """Aggregate serving stats over ``completed[since_request:]`` /
-        ``flush_log[since_flush:]`` (snapshot the list lengths at the end
-        of warmup to get steady-state numbers)."""
+        ``flush_log[since_flush:]`` / ``dead_letters[since_dead:]``
+        (snapshot the list lengths at the end of warmup to get
+        steady-state numbers)."""
         done = self.completed[since_request:]
         flushes = self.flush_log[since_flush:]
+        dead = self.dead_letters[since_dead:]
         lat = np.asarray([r.latency for r in done], np.float64)
         out = {
             "n_requests": len(done),
             "n_flushes": len(flushes),
             "n_buckets": len({f.bucket for f in flushes}),
             "pending": self.pending,
+            "n_dead_letters": len(dead),
         }
+        resolved = len(done) + len(dead)
+        if resolved:
+            out["availability"] = len(done) / resolved
+        degraded = [r for r in done if r.tier not in (None, "planned")]
+        out["n_degraded"] = len(degraded)
         if len(done):
+            out["degraded_rate"] = len(degraded) / len(done)
             span = max(r.t_done for r in done) - min(r.t_submit for r in done)
             out["req_per_s"] = len(done) / max(span, 1e-9)
             out["p50_latency_s"] = float(np.percentile(lat, 50))
             out["p95_latency_s"] = float(np.percentile(lat, 95))
             out["mean_latency_s"] = float(lat.mean())
+        if degraded:
+            dlat = np.asarray([r.latency for r in degraded], np.float64)
+            out["p50_latency_degraded_s"] = float(np.percentile(dlat, 50))
+            out["p95_latency_degraded_s"] = float(np.percentile(dlat, 95))
         if flushes:
             # request-weighted: the fraction of traffic served off a
             # cached plan (a rare new pad bucket is one small miss-flush,
@@ -247,6 +466,8 @@ class SpGemmService:
                                                       for f in flushes]))
             out["mean_lanes_per_flush"] = float(np.mean([f.n_requests
                                                          for f in flushes]))
+            out["flush_retry_rate"] = (sum(f.attempts > 1 for f in flushes)
+                                       / len(flushes))
         return out
 
     def bucket_outcomes(self) -> dict:
@@ -255,9 +476,12 @@ class SpGemmService:
         buckets: dict[tuple, dict] = {}
         for f in self.flush_log:
             b = buckets.setdefault(f.bucket, {
-                "flushes": 0, "requests": 0, "plan_hits": 0, "engines": {}})
+                "flushes": 0, "requests": 0, "plan_hits": 0, "engines": {},
+                "degraded": 0, "failed": 0})
             b["flushes"] += 1
             b["requests"] += f.n_requests
             b["plan_hits"] += int(f.plan_hit)
             b["engines"][f.engine] = b["engines"].get(f.engine, 0) + 1
+            b["degraded"] += int(f.degraded)
+            b["failed"] += f.n_failed
         return buckets

@@ -1,0 +1,560 @@
+"""Resilience layer: deterministic fault injection, operand validation,
+autotune quarantine, retry/deadline/degradation policies, shard-worker
+recovery, and the end-to-end chaos test (worker killed mid-flush plus a
+10% injected kernel-fault rate -> every request resolves, surviving
+results bit-exact against a fault-free run).
+
+Everything here is seeded/virtual-clocked: no real time dependence, no
+flaky randomness.  The suite runs on any device count — the CI
+``chaos-fast`` lane re-runs it with 8 forced host devices so the
+sharded-worker paths are exercised multi-device."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import dispatch as dp
+from repro.core import spgemm_engines as sg
+from repro.core.formats import (InvalidOperand, random_sparse, validate_csr,
+                                validate_operands)
+from repro.distributed import spgemm_shard as shard
+from repro.runtime import faultinject as fi
+from repro.serving import spgemm_service as svc
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _mat(n=48, density=0.02, seed=0, pattern="uniform"):
+    return random_sparse(n, n, density, seed=seed, pattern=pattern)
+
+
+def _dense(csr):
+    return np.asarray(csr.to_dense(), np.float64)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness
+# ---------------------------------------------------------------------------
+
+def test_hooks_are_noops_when_disabled():
+    assert fi.active() is None
+    fi.fire("dispatch.execute", engine="esc")       # must not raise
+    m = _mat(seed=1)
+    assert fi.corrupt("dispatch.execute", m) is m   # identity, same object
+
+
+def test_raise_spec_fires_and_logs():
+    with fi.injected(fi.FaultSpec(site="dispatch.execute")) as inj:
+        with pytest.raises(fi.InjectedFault) as ei:
+            fi.fire("dispatch.execute", engine="esc")
+        assert ei.value.site == "dispatch.execute"
+        assert inj.events[0]["site"] == "dispatch.execute"
+        assert inj.events[0]["engine"] == "esc"
+    fi.fire("dispatch.execute")  # uninstalled again on exit
+
+
+def test_match_filter_and_max_fires():
+    spec = fi.FaultSpec(site="shard.worker", match={"device": 1},
+                        max_fires=1)
+    with fi.injected(spec) as inj:
+        fi.fire("shard.worker", device=0)           # wrong device: no fire
+        with pytest.raises(fi.InjectedFault):
+            fi.fire("shard.worker", device=1)
+        fi.fire("shard.worker", device=1)           # max_fires exhausted
+        assert spec.fires == 1 and len(inj.events) == 1
+
+
+def test_rate_is_seed_deterministic():
+    def pattern(seed):
+        fired = []
+        with fi.injected(fi.FaultSpec(site="s", rate=0.3), seed=seed):
+            for _ in range(40):
+                try:
+                    fi.fire("s")
+                    fired.append(0)
+                except fi.InjectedFault:
+                    fired.append(1)
+        return fired
+    a, b = pattern(7), pattern(7)
+    assert a == b                       # same seed -> identical schedule
+    assert 0 < sum(a) < 40              # and the rate actually gates
+    assert pattern(8) != a              # different seed -> different draw
+
+
+def test_hang_spec_uses_injected_sleep():
+    naps = []
+    spec = fi.FaultSpec(site="s", kind="hang", delay_s=2.5)
+    with fi.injected(spec, sleep=naps.append) as inj:
+        inj.fire("s")
+    assert naps == [2.5]
+
+
+def test_corrupt_nan_and_garbage_are_detectable():
+    m = _mat(seed=2)
+    out = sg.spgemm_scl_array(m, m)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute", kind="nan")):
+        bad = fi.corrupt("dispatch.execute", out)
+    with pytest.raises(dp.CorruptOutput, match="non-finite"):
+        dp.check_result(bad)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute", kind="garbage")):
+        bad = fi.corrupt("dispatch.execute", out)
+    with pytest.raises(dp.CorruptOutput, match="out of range"):
+        dp.check_result(bad)
+    dp.check_result(out)  # the pristine result still screens clean
+
+
+def test_injected_execute_fault_reaches_dispatch(cache):
+    m = _mat(seed=3)
+    p = dp.plan(m, m, engine="esc", cache=cache)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute",
+                                  match={"engine": "esc"})):
+        with pytest.raises(fi.InjectedFault):
+            dp.execute(p, m, m)
+    np.testing.assert_allclose(_dense(dp.execute(p, m, m)),
+                               _dense(sg.spgemm_scl_array(m, m)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# operand validation at the boundary
+# ---------------------------------------------------------------------------
+
+def test_validate_csr_names_the_bad_field():
+    m = _mat(seed=4)
+    nnz = int(np.asarray(m.indptr)[-1])
+    assert nnz > 0
+    validate_csr(m, "A")  # pristine operand passes
+
+    indptr = np.asarray(m.indptr).copy()
+    indptr[1] = indptr[-1] + 5   # non-monotonic
+    with pytest.raises(InvalidOperand, match="non-monotonic") as ei:
+        validate_csr(dataclasses.replace(m, indptr=jnp.asarray(indptr)), "A")
+    assert ei.value.field == "A.indptr"
+
+    idx = np.asarray(m.indices).copy()
+    idx[0] = m.n_cols + 3        # out-of-range column
+    with pytest.raises(InvalidOperand, match="out of range") as ei:
+        validate_csr(dataclasses.replace(m, indices=jnp.asarray(idx)), "B")
+    assert ei.value.field == "B.indices"
+
+    data = np.asarray(m.data).copy()
+    data[0] = np.nan             # non-finite payload
+    with pytest.raises(InvalidOperand, match="non-finite") as ei:
+        validate_csr(dataclasses.replace(m, data=jnp.asarray(data)), "A")
+    assert ei.value.field == "A.data"
+
+
+def test_validate_operands_checks_inner_dims():
+    with pytest.raises(InvalidOperand, match="inner dims") as ei:
+        validate_operands(_mat(n=32), _mat(n=48))
+    assert ei.value.field == "B.shape"
+
+
+def test_service_submit_rejects_malformed_operand(cache):
+    clock = VirtualClock()
+    service = svc.SpGemmService(cache=cache, clock=clock, max_batch=4)
+    m = _mat(seed=5)
+    data = np.asarray(m.data).copy()
+    data[0] = np.inf
+    bad = dataclasses.replace(m, data=jnp.asarray(data))
+    with pytest.raises(InvalidOperand, match="A.data"):
+        service.submit(bad, m)
+    # the poisoned request never entered a queue or burned an id
+    assert service.pending == 0 and service._next_id == 0
+
+
+def test_dispatch_plan_rejects_malformed_operand(cache):
+    m = _mat(seed=6)
+    idx = np.asarray(m.indices).copy()
+    idx[0] = -3
+    bad = dataclasses.replace(m, indices=jnp.asarray(idx))
+    with pytest.raises(InvalidOperand, match="A.indices"):
+        dp.plan(bad, m, engine="auto", cache=cache)
+
+
+# hypothesis property tests are defined only when the package imports
+# (CI installs the dev deps; a bare checkout still runs everything else)
+if HAVE_HYPOTHESIS:
+    @given(n=st.integers(2, 48), density=st.floats(0.005, 0.3),
+           seed=st.integers(0, 10_000),
+           pattern=st.sampled_from(["uniform", "powerlaw", "banded"]))
+    @settings(max_examples=30, deadline=None)
+    def test_random_sparse_always_validates(n, density, seed, pattern):
+        validate_csr(random_sparse(n, n, density, seed=seed,
+                                   pattern=pattern))
+
+    @given(n=st.integers(4, 32), seed=st.integers(0, 10_000),
+           slot=st.integers(0, 10_000),
+           mutation=st.sampled_from(["indptr", "indices", "data"]))
+    @settings(max_examples=30, deadline=None)
+    def test_single_field_corruption_is_always_caught(n, seed, slot,
+                                                      mutation):
+        """Any single-field structural corruption of a valid operand
+        must be rejected, naming the corrupted field."""
+        m = random_sparse(n, n, 0.2, seed=seed)
+        nnz = int(np.asarray(m.indptr)[-1])
+        assume(nnz > 0)
+        i = slot % nnz
+        if mutation == "indptr":
+            arr = np.asarray(m.indptr).copy()
+            arr[1 + (slot % m.n_rows)] = -1  # below start: non-monotonic
+            bad = dataclasses.replace(m, indptr=jnp.asarray(arr))
+        elif mutation == "indices":
+            arr = np.asarray(m.indices).copy()
+            arr[i] = m.n_cols + (slot % 7)
+            bad = dataclasses.replace(m, indices=jnp.asarray(arr))
+        else:
+            arr = np.asarray(m.data).copy()
+            arr[i] = np.nan
+            bad = dataclasses.replace(m, data=jnp.asarray(arr))
+        with pytest.raises(InvalidOperand) as ei:
+            validate_csr(bad, "A")
+        assert ei.value.field.startswith("A.")
+
+
+# ---------------------------------------------------------------------------
+# autotune quarantine
+# ---------------------------------------------------------------------------
+
+def test_quarantine_roundtrip_and_version_bump(cache):
+    key = "shape=(48,48)x(48,48)|nnz=64x64"
+    v0 = cache.version
+    cache.put(key, "esc", "autotune")
+    cache.quarantine(key, "esc", None, reason="kernel crashed")
+    assert cache.is_quarantined(key, "esc")
+    assert cache.is_quarantined(key, "esc", None)
+    assert not cache.is_quarantined(key, "spz-fused", "xla")
+    assert ("esc", None) in cache.quarantined(key)
+    assert cache.get(key) is None      # the poisoned selection was dropped
+    assert cache.version > v0          # memoized plans invalidated
+    # quarantine survives a disk round-trip (fresh cache object, same file)
+    reread = dp.AutotuneCache(cache.path)
+    assert reread.is_quarantined(key, "esc")
+
+
+def test_quarantine_merges_across_processes(cache, tmp_path):
+    key = "k"
+    other = dp.AutotuneCache(cache.path)
+    cache.quarantine(key, "esc", None)
+    other.quarantine(key, "spz-fused", "xla")   # concurrent writer
+    merged = dp.AutotuneCache(cache.path)
+    assert merged.is_quarantined(key, "esc")
+    assert merged.is_quarantined(key, "spz-fused", "xla")
+
+
+def test_autotune_sweep_survives_crashing_engine(cache):
+    """A candidate that raises mid-sweep is quarantined and the sweep
+    finishes on the healthy engines — the satellite's crashing fake
+    engine, registered for the duration of the test."""
+    def crashy(A, B, **kw):
+        raise RuntimeError("synthetic kernel crash")
+    dp.register_engine("crashy", crashy, measure=True,
+                       description="always raises (test engine)")
+    try:
+        m = _mat(seed=7)
+        p = dp.plan(m, m, engine="auto", autotune=True, cache=cache)
+        assert p.source == "autotune" and p.engine != "crashy"
+        assert cache.is_quarantined(p.cache_key, "crashy")
+        # and the winner actually runs
+        np.testing.assert_allclose(_dense(dp.execute(p, m, m)),
+                                   _dense(sg.spgemm_scl_array(m, m)),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        dp._REGISTRY.pop("crashy", None)
+
+
+def test_plan_routes_around_quarantined_selection(cache):
+    m = _mat(seed=8)
+    p0 = dp.plan(m, m, engine="auto", cache=cache)
+    cache.quarantine(p0.cache_key, p0.engine, p0.backend,
+                     reason="poisoned by test")
+    p1 = dp.plan(m, m, engine="auto", cache=cache)
+    assert p1.engine != p0.engine or p1.backend != p0.backend
+    assert p1.rule == "quarantine-fallback" or p1.source == "cache"
+
+
+def test_measure_fault_site_quarantines_mid_sweep(cache):
+    """The same mid-sweep hardening, driven through the injection
+    harness instead of a fake engine: the measured candidate that dies
+    is quarantined, the sweep continues."""
+    m = _mat(seed=9)
+    with fi.injected(fi.FaultSpec(site="dispatch.measure",
+                                  match={"engine": "esc"})):
+        p = dp.plan(m, m, engine="auto", autotune=True, cache=cache)
+    assert p.source == "autotune" and p.engine != "esc"
+    assert cache.is_quarantined(p.cache_key, "esc")
+
+
+# ---------------------------------------------------------------------------
+# retry / deadline / degradation (execute_resilient)
+# ---------------------------------------------------------------------------
+
+def _nosleep_policy(**kw):
+    kw.setdefault("sleep", lambda s: None)
+    return dp.RetryPolicy(**kw)
+
+
+def test_execute_resilient_retries_transient_fault(cache):
+    m = _mat(seed=10)
+    p = dp.plan(m, m, engine="esc", cache=cache)
+    naps = []
+    policy = _nosleep_policy(sleep=naps.append)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute", max_fires=2)):
+        out, report = dp.execute_resilient(p, m, m, policy=policy,
+                                           cache=cache)
+    assert report.tier == 0 and report.attempts == 3
+    assert report.tier_label == "planned" and not report.degraded
+    assert naps == [policy.backoff_s(1), policy.backoff_s(2)]  # exponential
+    assert naps[1] == naps[0] * policy.backoff_factor
+    np.testing.assert_allclose(_dense(out),
+                               _dense(sg.spgemm_scl_array(m, m)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_execute_resilient_degrades_and_quarantines(cache):
+    m = _mat(seed=11)
+    p = dp.plan(m, m, engine="spz-fused", backend="xla", cache=cache)
+    # the planned engine fails persistently; first healthy rung is esc
+    with fi.injected(
+            fi.FaultSpec(site="dispatch.execute",
+                         match={"engine": "spz-fused"})):
+        out, report = dp.execute_resilient(p, m, m,
+                                           policy=_nosleep_policy(),
+                                           cache=cache)
+    assert report.degraded and report.engine == "esc"
+    assert report.tier_label == "degraded:esc"
+    assert cache.is_quarantined(p.cache_key, "spz-fused", p.backend)
+    assert ("spz-fused", p.backend) in report.quarantined
+    np.testing.assert_allclose(_dense(out),
+                               _dense(sg.spgemm_scl_array(m, m)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_execute_resilient_catches_silent_corruption(cache):
+    """NaN output without an exception must count as a failed attempt,
+    not be served."""
+    m = _mat(seed=12)
+    p = dp.plan(m, m, engine="esc", cache=cache)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute", kind="nan",
+                                  max_fires=1)):
+        out, report = dp.execute_resilient(p, m, m,
+                                           policy=_nosleep_policy(),
+                                           cache=cache)
+    assert report.attempts == 2 and report.tier == 0
+    assert "CorruptOutput" in report.errors[0]
+    dp.check_result(out)
+
+
+def test_execute_resilient_deadline(cache):
+    m = _mat(seed=13)
+    p = dp.plan(m, m, engine="esc", cache=cache)
+    clock = VirtualClock()
+    policy = _nosleep_policy(deadline_s=1.0, clock=clock,
+                             sleep=lambda s: clock.advance(10.0))
+    with fi.injected(fi.FaultSpec(site="dispatch.execute")):
+        with pytest.raises(dp.DeadlineExceeded):
+            dp.execute_resilient(p, m, m, policy=policy, cache=cache)
+
+
+def test_execute_resilient_exhausts_all_tiers(cache):
+    m = _mat(seed=14)
+    p = dp.plan(m, m, engine="esc", cache=cache)
+    with fi.injected(fi.FaultSpec(site="dispatch.execute")):  # every engine
+        with pytest.raises(dp.ExhaustedFallbacks) as ei:
+            dp.execute_resilient(p, m, m, policy=_nosleep_policy(),
+                                 cache=cache)
+    report = ei.value.report
+    # every rung of the ladder was tried, retried, and quarantined
+    assert report.attempts == 3 * 3
+    assert len(report.quarantined) == 3
+    for eng, bk in report.quarantined:
+        assert cache.is_quarantined(p.cache_key, eng, bk)
+
+
+# ---------------------------------------------------------------------------
+# shard-worker loss and recovery
+# ---------------------------------------------------------------------------
+
+def _batch(seeds, n=64, density=0.02):
+    from repro.core.formats import batch_csr
+    mats = [_mat(n=n, density=density, seed=s) for s in seeds]
+    return mats, batch_csr(mats)
+
+
+def test_worker_kill_recovers_bit_exact(cache):
+    """Kill one shard worker mid-flush: its lanes re-run on a survivor
+    (or the flush is retried whole on one device) and the assembled
+    results are bit-identical to the fault-free run."""
+    mats, A = _batch([1, 2, 3, 4])
+    sp = shard.plan_sharded(A, A, "esc", cache=cache)
+    want = shard.execute_sharded(sp, A, A)
+    kill = shard.kill_worker_spec(0)
+    with fi.injected(kill) as inj:
+        if sp.n_dev == 1:
+            # nowhere to migrate: the loss must surface for the caller
+            # (the serving layer's retry tier) to handle
+            with pytest.raises(shard.WorkerLost):
+                shard.execute_sharded(sp, A, A)
+            assert kill.fires == 1
+            got = shard.execute_sharded(sp, A, A)  # kill spec exhausted
+        else:
+            got = shard.execute_sharded(sp, A, A)
+            assert any(e["site"] == "shard.worker" for e in inj.events)
+    for i in range(len(mats)):
+        assert np.array_equal(np.asarray(want[i].indptr),
+                              np.asarray(got[i].indptr))
+        assert np.array_equal(np.asarray(want[i].to_dense()),
+                              np.asarray(got[i].to_dense()))
+
+
+def test_all_workers_dead_raises(cache):
+    mats, A = _batch([5, 6])
+    sp = shard.plan_sharded(A, A, "esc", cache=cache)
+    specs = [shard.kill_worker_spec(d, max_fires=None)
+             for d in range(sp.n_dev)]
+    with fi.injected(*specs):
+        with pytest.raises(shard.WorkerLost):
+            shard.execute_sharded(sp, A, A)
+
+
+# ---------------------------------------------------------------------------
+# the chaos test (the PR's acceptance gate)
+# ---------------------------------------------------------------------------
+
+def _run_traffic(cache, specs=(), seed=0, n_req=16, policy=None):
+    """Drive a fixed synthetic request stream through a fresh service,
+    optionally under injected chaos; returns the service."""
+    clock = VirtualClock()
+    service = svc.SpGemmService(cache=cache, clock=clock, max_batch=4,
+                                flush_timeout=1.0,
+                                policy=policy or dp.RetryPolicy(
+                                    max_attempts=5, backoff_base_s=0.0))
+    classes = [(32, 0.02, "uniform"), (48, 0.05, "uniform"),
+               (48, 0.008, "powerlaw"), (64, 0.03, "banded")]
+    mats = [_mat(n=c[0], density=c[1], pattern=c[2], seed=i)
+            for i, c in enumerate(classes)]
+    rng = np.random.default_rng(3)
+    stream = [mats[int(rng.integers(len(mats)))] for _ in range(n_req)]
+    if specs:
+        with fi.injected(*specs, seed=seed):
+            for m in stream:
+                service.submit(m, m, now=clock.advance(0.01))
+            service.drain()
+    else:
+        for m in stream:
+            service.submit(m, m, now=clock.advance(0.01))
+        service.drain()
+    return service
+
+
+def test_chaos_worker_kill_plus_kernel_faults(tmp_path):
+    """The acceptance scenario: a shard worker is killed mid-flush AND
+    batched kernel launches fail at a 10% injected rate.  Every request
+    must resolve (result or structured dead letter — nothing silently
+    dropped), availability must clear 99%, and every surviving request
+    must be bit-exact against the fault-free run."""
+    ref = _run_traffic(dp.AutotuneCache(str(tmp_path / "ref.json")))
+    assert len(ref.completed) == 16 and not ref.dead_letters
+
+    chaos = _run_traffic(
+        dp.AutotuneCache(str(tmp_path / "chaos.json")),
+        specs=(fi.FaultSpec(site="kernel.batched", kind="raise", rate=0.10),
+               shard.kill_worker_spec(0)),
+        seed=11)
+
+    # nothing silently dropped: every submitted id resolves
+    for rid in range(16):
+        r = chaos.lookup(rid)
+        assert r.done, f"request {rid} neither completed nor dead-lettered"
+        assert (r.result is not None) != (r.error is not None)
+    assert len(chaos.completed) + len(chaos.dead_letters) == 16
+
+    stats = chaos.stats()
+    assert stats["availability"] >= 0.99, stats
+
+    # surviving requests are bit-exact vs the fault-free run: transient
+    # same-tier retries and worker re-bucketing change *where* a lane
+    # ran, never *what* it computed
+    want = {r.id: _dense(r.result) for r in ref.completed}
+    for r in chaos.completed:
+        if r.tier == "planned":
+            assert np.array_equal(_dense(r.result), want[r.id]), r.id
+        else:  # a degraded tier runs a different engine: exact-ish only
+            np.testing.assert_allclose(_dense(r.result), want[r.id],
+                                       rtol=1e-4, atol=1e-4)
+    # with 5 attempts against a 10% fault rate, the planned tier
+    # absorbs the chaos: no dead letters and (near-)no degradation
+    assert stats["availability"] == 1.0
+    assert stats["n_degraded"] == 0, [r.tier for r in chaos.completed]
+    # and the kill actually happened — the chaos was real
+    assert any(f.attempts > 1 for f in chaos.flush_log)
+
+
+def test_chaos_total_engine_failure_dead_letters_with_structure(tmp_path):
+    """When every tier including per-request isolation fails, requests
+    dead-letter with structured errors instead of raising out of the
+    service or vanishing."""
+    cache = dp.AutotuneCache(str(tmp_path / "dead.json"))
+    service = _run_traffic(
+        cache, n_req=4,
+        specs=(fi.FaultSpec(site="kernel.batched"),
+               fi.FaultSpec(site="dispatch.execute")),
+        policy=dp.RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    assert not service.completed
+    assert len(service.dead_letters) == 4
+    for r in service.dead_letters:
+        assert r.error is not None and r.error.stage == "isolate"
+        assert r.error.id == r.id and r.error.attempts >= 1
+        assert "InjectedFault" in r.error.kind
+        assert service.lookup(r.id) is r
+    stats = service.stats()
+    assert stats["availability"] == 0.0
+    assert stats["n_dead_letters"] == 4
+    rec = service.flush_log[-1]
+    assert rec.tier == "isolated" and rec.n_failed >= 1 and rec.errors
+
+
+def test_chaos_persistent_kernel_fault_degrades_not_fails(tmp_path):
+    """A batched-kernel fault that never clears forces the service down
+    the ladder: the flush ends up isolated per request on the reference
+    engine, every request still completes, and the flush record shows
+    the degradation."""
+    cache = dp.AutotuneCache(str(tmp_path / "degrade.json"))
+    service = _run_traffic(
+        cache, n_req=4,
+        specs=(fi.FaultSpec(site="kernel.batched"),),
+        policy=dp.RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    assert len(service.completed) == 4 and not service.dead_letters
+    assert all(r.tier == "isolated" for r in service.completed)
+    assert service.stats()["availability"] == 1.0
+    assert service.stats()["n_degraded"] == 4
+    # the planned combo was quarantined for this bucket
+    assert any(rec.tier == "isolated" for rec in service.flush_log)
+    for m in [r.A for r in service.completed]:
+        key = dp.cache_key(m, m, backend="auto")
+        if cache.quarantined(key):
+            break
+    else:
+        pytest.fail("no bucket was quarantined")

@@ -186,3 +186,96 @@ def test_latencies_use_injected_clock(cache):
     r2 = service.submit(m, m, now=5.0)  # fills the bucket -> flush at t=5
     assert r1.latency == pytest.approx(5.0)
     assert r2.latency == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# edge cases (PR 6 satellites)
+# ---------------------------------------------------------------------------
+
+def test_drain_with_empty_queue_is_a_noop(cache):
+    service, clock = _service(cache)
+    assert service.drain() == 0
+    assert service.pump() == 0
+    assert not service.flush_log and service.pending == 0
+    stats = service.stats()
+    assert stats["n_requests"] == 0 and stats["n_flushes"] == 0
+    assert "availability" not in stats  # nothing resolved yet
+
+
+def test_timeout_firing_during_in_flight_flush(cache):
+    """A flush that runs long enough for another bucket's timeout to
+    expire mid-flight must not lose that bucket: the next pump picks it
+    up, and no request is dropped."""
+    from repro.runtime import faultinject as fi
+    service, clock = _service(cache, max_batch=8, flush_timeout=0.5)
+    slow = service.submit(_mat(n=32, seed=1), _mat(n=32, seed=1), now=0.0)
+    late = service.submit(_mat(n=48, seed=1), _mat(n=48, seed=1), now=0.4)
+    clock.t = 0.5  # only the first bucket is due
+    # the in-flight flush "takes" 0.6s of virtual time: the second
+    # bucket's timeout expires while the first is still flushing
+    spec = fi.FaultSpec(site="service.flush", kind="call",
+                        action=lambda **ctx: clock.advance(0.6))
+    with fi.injected(spec):
+        assert service.pump() == 1
+    assert slow.done and not late.done      # not flushed mid-iteration...
+    assert service.pump() == 1              # ...but the next pump gets it
+    assert late.done and service.pending == 0
+    assert [f.reason for f in service.flush_log] == ["timeout", "timeout"]
+
+
+def test_duplicate_submissions_get_distinct_ids(cache):
+    """Submitting the same matrix objects repeatedly must yield unique
+    request ids that each resolve independently via lookup."""
+    service, clock = _service(cache, max_batch=2)
+    m = _mat(seed=7)
+    reqs = [service.submit(m, m, now=clock.advance(0.01)) for _ in range(4)]
+    ids = [r.id for r in reqs]
+    assert len(set(ids)) == 4
+    service.drain()
+    for r in reqs:
+        assert service.lookup(r.id) is r and r.done
+    want = np.asarray(sg.spgemm_scl_array(m, m).to_dense())
+    for r in reqs:
+        np.testing.assert_allclose(np.asarray(r.result.to_dense()), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_hit_rate_accounting_when_flush_fails(cache):
+    """A flush that falls off the planned tier must count as a plan
+    miss, not a hit — availability and hit-rate accounting stay honest
+    under degradation."""
+    from repro.runtime import faultinject as fi
+    service, clock = _service(cache, max_batch=2)
+    service.policy = dp.RetryPolicy(max_attempts=2, backoff_base_s=0.0)
+    m = _mat(seed=8)
+    # warm flush: plan lands in the cache
+    for _ in range(2):
+        service.submit(m, m, now=clock.advance(0.01))
+    assert service.flush_log[-1].tier == "planned"
+    # poisoned flush: every batched kernel dies -> isolation serves it
+    with fi.injected(fi.FaultSpec(site="kernel.batched")):
+        for _ in range(2):
+            service.submit(m, m, now=clock.advance(0.01))
+    rec = service.flush_log[-1]
+    assert rec.tier == "isolated" and not rec.plan_hit
+    assert rec.attempts > 1 and rec.errors
+    stats = service.stats()
+    assert stats["n_requests"] == 4 and stats["availability"] == 1.0
+    assert stats["n_degraded"] == 2
+    # request-weighted hit rate: the isolated flush's 2 requests are
+    # misses even though the bucket's plan sits in the cache
+    assert stats["plan_hit_rate"] <= 0.5
+
+
+def test_deadline_expiry_dead_letters_stale_requests(cache):
+    service, clock = _service(cache, max_batch=8, flush_timeout=0.5)
+    service.policy = dp.RetryPolicy(deadline_s=1.0)
+    m = _mat(seed=9)
+    r = service.submit(m, m, now=0.0)
+    clock.t = 2.0  # past the per-request deadline before the flush runs
+    service.drain()
+    assert r.failed and r.error.stage == "deadline"
+    assert r.error.kind == "DeadlineExceeded"
+    assert service.lookup(r.id) is r and r in service.dead_letters
+    assert service.stats()["availability"] == 0.0
+    assert service.flush_log[-1].n_failed == 1

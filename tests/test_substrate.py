@@ -183,3 +183,72 @@ def test_resilient_loop_gives_up(tmp_path):
                       save_fn=lambda s, st: None,
                       restore_fn=lambda: None,
                       preempt_hook=always_preempt)
+
+
+def test_resilient_loop_save_failure_does_not_burn_restarts(tmp_path):
+    """A flaky checkpoint disk is logged under save_failures and training
+    continues — with max_restarts=0 any miscounted save failure would
+    abort the run."""
+    saves = {"n": 0}
+
+    def bad_save(step, state):
+        saves["n"] += 1
+        raise RuntimeError("checkpoint disk full")
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=2, max_restarts=0)
+    state, hist = run_resilient(
+        lambda s, b: ({"x": s["x"] + 1}, {"loss": 0.5}),
+        {"x": jnp.zeros(())}, lambda step: {}, fcfg, num_steps=6,
+        save_fn=bad_save, restore_fn=lambda: None)
+    assert float(state["x"]) == 6
+    assert hist["restarts"] == 0
+    assert hist["save_failures"] == saves["n"] == 3  # steps 2, 4, 6
+    assert hist["saves"] == 0
+
+
+def test_resilient_loop_restore_failure_cold_starts(tmp_path):
+    """A restore_fn that raises (corrupt checkpoint) means 'no usable
+    checkpoint': the restart goes back to step 0 instead of crashing the
+    supervisor."""
+    armed = {"on": True}
+
+    def preempt(step):
+        if step == 3 and armed["on"]:
+            armed["on"] = False
+            raise Preempted("sim")
+
+    def bad_restore():
+        raise OSError("corrupt checkpoint dir")
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                       max_restarts=2)
+    state, hist = run_resilient(
+        lambda s, b: ({"x": s["x"] + 1}, {"loss": 0.5}),
+        {"x": jnp.zeros(())}, lambda step: {}, fcfg, num_steps=5,
+        save_fn=lambda s, st: None, restore_fn=bad_restore,
+        preempt_hook=preempt)
+    assert hist["restarts"] == 1
+    # cold restart: step counter reset to 0, in-memory state carried on
+    # (3 steps before the preemption + 5 after the reset)
+    assert float(state["x"]) == 8
+
+
+def test_resilient_loop_joins_flaky_async_save(tmp_path):
+    """An async save handle whose join() raises must be swallowed (and
+    always joined — no leak), not take down the run or leak into the
+    restart path."""
+    joins = {"n": 0}
+
+    class FlakyHandle:
+        def join(self):
+            joins["n"] += 1
+            raise RuntimeError("async save died")
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=2, max_restarts=0)
+    state, hist = run_resilient(
+        lambda s, b: ({"x": s["x"] + 1}, {"loss": 0.5}),
+        {"x": jnp.zeros(())}, lambda step: {}, fcfg, num_steps=4,
+        save_fn=lambda s, st: FlakyHandle(), restore_fn=lambda: None)
+    assert float(state["x"]) == 4
+    assert hist["saves"] == 2          # both saves were issued...
+    assert joins["n"] == 2             # ...and both handles joined
