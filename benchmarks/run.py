@@ -299,17 +299,70 @@ def dispatch_bench(mats, fast=False):
     # the pallas tier runs in interpret mode — labelled accordingly);
     # the xla timing doubles as the legacy dispatch.exec.spz-fused row
     import jax
+    from repro.core import stream as kvstream
+    from repro.core.formats import EMPTY
+    # synthetic (S, L, R) work bucket for the stage-level kernel rows:
+    # unsorted product streams for the fused pipeline, plus two sorted
+    # unique EMPTY-padded partitions for the native merge kernel
+    S, R, C = 8, 16, 4
+    L = C * R
+    rng = np.random.default_rng(7)
+    b_keys = rng.integers(0, 4096, size=(S, L)).astype(np.int32)
+    b_vals = rng.standard_normal((S, L)).astype(np.float32)
+    b_lens = rng.integers(L // 2, L + 1, size=S).astype(np.int32)
+    b_keys[np.arange(L)[None, :] >= b_lens[:, None]] = EMPTY
+
+    def _sorted_side(seed):
+        r = np.random.default_rng(seed)
+        k = np.full((S, L), EMPTY, np.int32)
+        v = np.zeros((S, L), np.float32)
+        lens = r.integers(0, L + 1, size=S).astype(np.int32)
+        for i, n in enumerate(lens):
+            k[i, :n] = np.sort(r.choice(4096, size=n, replace=False))
+            v[i, :n] = r.standard_normal(n)
+        return k, v, lens
+
+    mka, mva, mla = _sorted_side(1)
+    mkb, mvb, mlb = _sorted_side(2)
     for bk in ("xla", "pallas"):
         label = bk if (bk != "pallas" or jax.default_backend() == "tpu") \
             else "pallas-interpret"
+        reps = 1 if bk == "pallas" else 3
         dp.spgemm(A, A, engine="spz-fused", R=16, backend=bk)  # warm
         t_bk, _ = _time_call(
             lambda: dp.spgemm(A, A, engine="spz-fused", R=16, backend=bk),
-            repeat=1 if bk == "pallas" else 3)
+            repeat=reps)
         if bk == "xla":
             _emit("dispatch.exec.spz-fused", t_bk, f"matrix={mats[0][0]}")
         _emit(f"dispatch.exec.spz-fused/{label}", t_bk,
               f"matrix={mats[0][0]}|backend={bk}")
+        # stage rows: the device-resident merge primitive and the whole
+        # sort+merge-tree bucket (pallas runs its single-kernel
+        # fused_bucket; xla composes chunk_sort + the XLA merge tree),
+        # jitted end-to-end the way the spz driver issues them
+        merge_fn = jax.jit(
+            lambda ka, va, la, kb_, vb, lb: kvstream.merge_partitions(
+                ka, va, la, kb_, vb, lb, R=R, backend=bk)[0])
+        fused_fn = jax.jit(
+            lambda k, v, n: kvstream.fused_sort_merge(
+                k, v, n, R=R, backend=bk)[0])
+
+        def _merge():
+            return merge_fn(mka, mva, mla, mkb, mvb,
+                            mlb).block_until_ready()
+
+        def _fused():
+            return fused_fn(b_keys, b_vals, b_lens).block_until_ready()
+
+        _merge()
+        t_m, _ = _time_call(_merge, repeat=reps)
+        _emit(f"dispatch.exec.spz-fused/{label}.merge", t_m,
+              f"streams={S}|L={L}|R={R}|backend={bk}")
+        _fused()
+        t_f, _ = _time_call(_fused, repeat=reps)
+        _emit(f"dispatch.exec.spz-fused/{label}.fused-bucket", t_f,
+              f"streams={S}|L={L}|R={R}|C={C}|backend={bk}|"
+              f"single_kernel={bk == 'pallas'}")
     # batched path: ragged request batch, one compilation across lanes
     lanes = [random_sparse(256, 256, d, seed=i)
              for i, d in enumerate((0.005, 0.01, 0.02, 0.04))]

@@ -999,13 +999,35 @@ def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
 
 
 def explain(A: CSR, B: CSR,
-            rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS) -> dict:
+            rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS, *,
+            backend: str = "auto",
+            cache: Optional[AutotuneCache] = None) -> dict:
     """Dry-run selection: features + the rule and engine 'auto' would pick
-    (ignoring any cached plan) — for benchmarks and debugging."""
+    (ignoring any cached *engine* plan) — for benchmarks and debugging.
+
+    The dict also surfaces the kernel-backend leg of the decision, which
+    an ``ExecutionPlan`` resolves but selection output previously hid:
+
+    ``backend``
+        the kernel backend a plan for this (engine, request) would run —
+        an autotuned backend recorded for the bucket (e.g. the
+        ``spz-fused/pallas`` vs ``/xla`` winner) beats the "auto"
+        default, exactly as in :func:`plan`; ``None`` for engines that
+        take no kernel backend.
+    ``rule``
+        the heuristic rule that picked the engine.
+    """
     feats = extract_features(A, B)
     engine, rule = choose_engine(feats, rules)
-    return {"engine": engine, "rule": rule, "features": feats,
-            "cache_key": cache_key(A, B)}
+    key = cache_key(A, B, backend=backend)
+    if cache is None:
+        cache = default_cache()
+    hit = cache.get(key)
+    cached_bk = hit.get("backend") if hit else None
+    plan_bk, _ = _resolve_plan_backend(get_engine(engine), backend,
+                                       cached_bk, {}, strict=False)
+    return {"engine": engine, "rule": rule, "backend": plan_bk,
+            "features": feats, "cache_key": key}
 
 
 # ---------------------------------------------------------------------------

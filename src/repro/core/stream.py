@@ -91,14 +91,16 @@ def fused_sort_merge(keys, vals, plens, *, R, backend="auto",
     """Device-resident sort + zip-merge tree over padded product streams.
 
     keys/vals: (S, L) unsorted partial products (EMPTY padded), L = C*R
-    with C a power of two; plens: (S,) valid lengths.  Chunk-sorts every
-    R-chunk through the resolved backend's ``chunk_sort``, then runs the
-    full merge tree with all pointer state on the device (the merge tree
-    is backend-shared today — ``KernelBackend.merge_partitions`` is the
-    seam a TPU-native merge kernel would fill).  Returns (keys (S, L),
-    vals, lens (S,), counters (6,) int32: [n_mssort, sort_elems, n_mszip,
-    zip_elems, chunk_loads, chunk_stores]) with the host driver's
-    instruction accounting (zeros when ``with_counters=False`` skips the
+    with C a power of two; plens: (S,) valid lengths.  Backends that
+    provide the whole-pipeline ``fused_bucket`` kernel (pallas) run sort
+    + the entire merge tree as ONE kernel issue with the partitions
+    resident in VMEM across rounds; otherwise the pipeline composes the
+    backend's ``chunk_sort`` with the XLA merge tree
+    (``merge_tree.zip_merge_tree``).  Both routes are bit-identical.
+    Returns (keys (S, L), vals, lens (S,), counters (6,) int32:
+    [n_mssort, sort_elems, n_mszip, zip_elems, chunk_loads,
+    chunk_stores]) with the host driver's instruction accounting (zeros
+    for the merge counters when ``with_counters=False`` skips the
     pointer state machine).
 
     ``detailed=True`` instead returns the per-(round, pair) merge
@@ -107,8 +109,13 @@ def fused_sort_merge(keys, vals, plens, *, R, backend="auto",
     counts across split kernel calls (the sort-phase counters are
     plens-derivable, so they are omitted there).
     """
+    bk = kb.resolve_backend(backend)
+    if bk.fused_bucket is not None:
+        return bk.fused_bucket(keys, vals, plens.astype(jnp.int32), R=R,
+                               with_counters=with_counters,
+                               detailed=detailed)
     sk, sv, sl, n_mssort, sort_elems = chunk_sort_partitions(
-        keys, vals, plens, R=R, backend=backend)
+        keys, vals, plens, R=R, backend=bk)
     if detailed:
         return merge_tree.zip_merge_tree(sk, sv, sl, R=R, detailed=True)
     mk, mv, ml, zc = merge_tree.zip_merge_tree(sk, sv, sl, R=R,

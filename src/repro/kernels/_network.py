@@ -14,6 +14,24 @@ data-parallel structures are:
 
 All helpers are pure jnp on (S, W) tiles and run unchanged inside Pallas
 kernel bodies (interpret=True on CPU, MXU/VPU lowering on TPU).
+
+Invariants the kernels built from these blocks rely on:
+
+  * network widths are powers of two — ``xor_shuffle`` reshapes the lane
+    axis into (W/2j, 2, j) groups, so every stride j must divide W;
+  * EMPTY (INT32_MAX) compares greater than every valid key, so
+    EMPTY-padded rows sort/merge with the padding parked at the end and
+    an ascending-prefix ++ flipped-sorted-suffix concatenation of two
+    padded rows is a valid bitonic sequence for ``bitonic_merge``;
+  * the ``*_stable`` variants compare (key, source-lane) pairs
+    lexicographically.  Source lanes are unique per row, so the order is
+    total and ties keep input order — a *stable* sort/merge, which is
+    what makes duplicate-value accumulation order deterministic and
+    bit-reproducible across backends;
+  * ``compress_onehot`` is exact because keys are split into two 16-bit
+    halves before the f32 one-hot matmul (f32 holds integers < 2**24
+    exactly) and each output lane receives exactly one unit coefficient,
+    so values are moved, not recombined.
 """
 from __future__ import annotations
 
@@ -78,6 +96,56 @@ def bitonic_merge(keys, *carried):
         keys, carried = _compare_exchange(keys, carried, j, asc)
         j //= 2
     return (keys, *carried)
+
+
+def compare_exchange_stable(keys, idx, vals, j, asc):
+    """One compare-exchange stage at stride j on (key, idx) pairs.
+
+    ``idx`` is the original lane of each element — unique per row — so the
+    lexicographic order is total and the network reproduces a *stable*
+    ascending sort of the keys.  ``vals`` follows the pairs."""
+    lane = _lane_iota(keys.shape)
+    is_lower = (lane & j) == 0
+    pk = xor_shuffle(keys, j)
+    pi = xor_shuffle(idx, j)
+    gt = (keys > pk) | ((keys == pk) & (idx > pi))
+    lt = (keys < pk) | ((keys == pk) & (idx < pi))
+    take_partner = jnp.where(asc, jnp.where(is_lower, gt, lt),
+                             jnp.where(is_lower, lt, gt))
+    return (jnp.where(take_partner, pk, keys),
+            jnp.where(take_partner, pi, idx),
+            jnp.where(take_partner, xor_shuffle(vals, j), vals))
+
+
+def bitonic_sort_stable(keys, idx, vals):
+    """Full ascending stable bitonic sort of each row by (key, idx)."""
+    W = keys.shape[-1]
+    lane = _lane_iota(keys.shape)
+    k = 2
+    while k <= W:
+        asc = (lane & k) == 0
+        j = k // 2
+        while j >= 1:
+            keys, idx, vals = compare_exchange_stable(keys, idx, vals, j,
+                                                      asc)
+            j //= 2
+        k *= 2
+    return keys, idx, vals
+
+
+def bitonic_merge_stable(keys, idx, vals):
+    """Sort a bitonic row ascending by (key, idx) pairs — the cheap
+    log(W)-stage half of the stable network for inputs that are already
+    an ascending prefix ++ descending suffix (two sorted runs, the second
+    flipped).  This is the network shape the mszip instructions exploit:
+    merging two sorted chunks costs log(W) stages, not log^2(W)."""
+    W = keys.shape[-1]
+    asc = jnp.ones(keys.shape, bool)
+    j = W // 2
+    while j >= 1:
+        keys, idx, vals = compare_exchange_stable(keys, idx, vals, j, asc)
+        j //= 2
+    return keys, idx, vals
 
 
 def shift_right(x, d, fill):

@@ -13,8 +13,14 @@ site: a :class:`KernelBackend` bundles the four stream primitives —
   ``stream_sort``       host-tier mssortk+mssortv kernel issue
   ``stream_merge``      host-tier mszipk+mszipv kernel issue
   ``merge_partitions``  device-resident full partition merge (the
-                        zip-merge tree's primitive — shared across
-                        backends today; the seam for TPU merge kernels)
+                        zip-merge tree's primitive)
+
+— plus the optional whole-pipeline slot
+
+  ``fused_bucket``      sort + the entire zip-merge tree for one
+                        (S, L, R) work bucket as ONE kernel issue
+                        (``None``: the driver composes chunk_sort +
+                        the XLA merge tree instead)
 
 — plus declared capabilities, and the registry resolves a backend ONCE
 (at plan time, in ``core/dispatch.py``) rather than per kernel issue.
@@ -23,8 +29,10 @@ Registered instances:
   ``xla``     pure-jnp oracles jitted as XLA computations (the driver
               workhorse off-TPU)
   ``pallas``  ``pl.pallas_call`` kernels (interpret mode automatically
-              off-TPU), including the native chunk-sort that runs inside
-              the fused spz pipeline — bit-identical to ``xla``
+              off-TPU): the native chunk-sort, the native
+              ``merge_partitions`` bitonic-merge kernel, and the
+              single-kernel fused bucket pipeline (chunks stay in VMEM
+              across merge rounds) — all bit-identical to ``xla``
   ``ref``     the unjitted pure-jnp oracles (eager; debugging)
 
 Every backend here is bit-compatible: same keys, values, lengths, and
@@ -34,12 +42,14 @@ performance decision.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Union
+from typing import Callable, Optional, Union
 
 import jax
 
 from repro.kernels import merge_tree, ref
 from repro.kernels.chunk_sort import chunk_sort_pallas
+from repro.kernels.fused_bucket import fused_bucket_pallas
+from repro.kernels.merge_partitions import merge_partitions_pallas
 from repro.kernels.stream_merge import stream_merge_pallas
 from repro.kernels.stream_sort import stream_sort_pallas
 
@@ -68,6 +78,7 @@ class KernelBackend:
     stream_sort: Callable
     stream_merge: Callable
     merge_partitions: Callable
+    fused_bucket: Optional[Callable] = None
     on_device: bool = True
     counters_exact: bool = True
     measure: bool = True
@@ -140,6 +151,21 @@ def _pallas_stream_merge(ka, va, la, kb, vb, lb):
                                interpret=not on_tpu())
 
 
+def _pallas_merge_partitions(ka, va, la, kb, vb, lb, *, R,
+                             pair_streams=None, with_counters=True):
+    return merge_partitions_pallas(ka, va, la, kb, vb, lb, R=R,
+                                   pair_streams=pair_streams,
+                                   with_counters=with_counters,
+                                   interpret=not on_tpu())
+
+
+def _pallas_fused_bucket(keys, vals, plens, *, R, with_counters=True,
+                         detailed=False):
+    return fused_bucket_pallas(keys, vals, plens, R=R,
+                               with_counters=with_counters,
+                               detailed=detailed, interpret=not on_tpu())
+
+
 register_backend(
     name="xla",
     chunk_sort=merge_tree.sort_chunks_linear,
@@ -153,10 +179,13 @@ register_backend(
     chunk_sort=_pallas_chunk_sort,
     stream_sort=_pallas_stream_sort,
     stream_merge=_pallas_stream_merge,
-    merge_partitions=merge_tree.merge_partitions,
+    merge_partitions=_pallas_merge_partitions,
+    fused_bucket=_pallas_fused_bucket,
     needs_tpu_for_perf=True,
     description="pl.pallas_call kernels (interpret mode off-TPU); the "
-                "native chunk-sort sorts a whole bucket in one issue")
+                "native chunk-sort, bitonic merge_partitions, and the "
+                "single-kernel fused bucket pipeline (VMEM-resident "
+                "merge tree)")
 register_backend(
     name="ref",
     chunk_sort=ref.stream_sort_ref,

@@ -8,8 +8,9 @@ scan), this kernel is **bit-identical** to the XLA oracle
 (``ref.stream_sort_ref`` / ``merge_tree.sort_chunks_linear``):
 
   * the sort is a bitonic network over the R lane dimension made *stable*
-    by comparing (key, source-lane) pairs lexicographically, so ties keep
-    product order exactly like a stable argsort;
+    by comparing (key, source-lane) pairs lexicographically
+    (``_network.bitonic_sort_stable``), so ties keep product order
+    exactly like a stable argsort;
   * duplicate values accumulate in a left-to-right linear association
     (an R-step sequential run prefix, the same adds in the same order as
     ``segment_sum``'s index-order accumulation) — a tree reduction would
@@ -18,8 +19,16 @@ scan), this kernel is **bit-identical** to the XLA oracle
     matmul with exactly one unit coefficient per output lane, which moves
     keys (16-bit split) and values bit-exactly.
 
+Invariants: R must be a power of two (bitonic network width); input keys
+beyond ``lens`` may be garbage (they are masked to EMPTY first); valid
+keys are < 2**31 - 1 so EMPTY is a strict upper bound and the 16-bit
+compress split is exact.
+
 One program sorts a (BLOCK_N, R) tile held in VMEM; the grid walks blocks
-of chunks, so a whole bucket's S*C chunks are one kernel issue.
+of chunks, so a whole bucket's S*C chunks are one kernel issue.  The tile
+body is exposed as :func:`sort_tile` so the single-kernel fused bucket
+pipeline (``kernels/fused_bucket.py``) can run the identical sort stage
+inside its own ``pallas_call``.
 """
 from __future__ import annotations
 
@@ -33,52 +42,22 @@ from repro.core.formats import EMPTY
 from repro.kernels import _network as net
 
 
-def _compare_exchange_stable(keys, idx, vals, j, asc):
-    """One compare-exchange stage at stride j on (key, idx) pairs.
+def sort_tile(keys, vals, lens):
+    """Sort/combine/compress an (N, R) tile of chunks — pure jnp, usable
+    inside any Pallas kernel body.
 
-    ``idx`` is the original lane of each element — unique per row — so the
-    lexicographic order is total and the network reproduces a *stable*
-    ascending sort of the keys."""
-    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
-    is_lower = (lane & j) == 0
-    pk = net.xor_shuffle(keys, j)
-    pi = net.xor_shuffle(idx, j)
-    gt = (keys > pk) | ((keys == pk) & (idx > pi))
-    lt = (keys < pk) | ((keys == pk) & (idx < pi))
-    take_partner = jnp.where(asc, jnp.where(is_lower, gt, lt),
-                             jnp.where(is_lower, lt, gt))
-    return (jnp.where(take_partner, pk, keys),
-            jnp.where(take_partner, pi, idx),
-            jnp.where(take_partner, net.xor_shuffle(vals, j), vals))
-
-
-def _bitonic_sort_stable(keys, idx, vals):
-    """Full ascending stable bitonic sort of each row by (key, idx)."""
-    W = keys.shape[-1]
-    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
-    k = 2
-    while k <= W:
-        asc = (lane & k) == 0
-        j = k // 2
-        while j >= 1:
-            keys, idx, vals = _compare_exchange_stable(keys, idx, vals, j,
-                                                       asc)
-            j //= 2
-        k *= 2
-    return keys, idx, vals
-
-
-def _chunk_sort_kernel(keys_ref, vals_ref, lens_ref, ok_ref, ov_ref, ol_ref):
-    keys = keys_ref[...]
-    vals = vals_ref[...].astype(jnp.float32)
-    lens = lens_ref[...]  # (BLOCK_N, 1)
+    keys: (N, R) int32, vals: (N, R) f32, lens: (N, 1) int32 valid
+    counts.  Returns (keys (N, R), vals (N, R), n (N,)) with the unique
+    sorted keys compressed to the front (EMPTY/0 beyond n), duplicate
+    values accumulated left-to-right — bit-identical to
+    ``ref.stream_sort_ref`` / ``merge_tree.sort_chunks_linear``."""
     R = keys.shape[-1]
     r = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
     valid = r < lens
     k = jnp.where(valid, keys, EMPTY)
     v = jnp.where(valid, vals, 0.0)
     # stable ascending sort (ties keep product order, like stable argsort)
-    k, _, v = _bitonic_sort_stable(k, r, v)
+    k, _, v = net.bitonic_sort_stable(k, r, v)
     # linear run accumulation: acc[i] = left-to-right prefix of i's run;
     # adding the predecessor's finished prefix keeps the float association
     # linear, bit-identical to segment_sum's index-order adds
@@ -97,7 +76,12 @@ def _chunk_sort_kernel(keys_ref, vals_ref, lens_ref, ok_ref, ov_ref, ol_ref):
     is_last = (k != net.shift_left(k, 1, EMPTY)) & (k != EMPTY)
     k2 = jnp.where(is_last, k, EMPTY)
     v2 = jnp.where(is_last, acc, 0.0)
-    k3, v3, n = net.compress_onehot(k2, v2)
+    return net.compress_onehot(k2, v2)
+
+
+def _chunk_sort_kernel(keys_ref, vals_ref, lens_ref, ok_ref, ov_ref, ol_ref):
+    k3, v3, n = sort_tile(keys_ref[...], vals_ref[...].astype(jnp.float32),
+                          lens_ref[...])
     ok_ref[...] = k3
     ov_ref[...] = v3.astype(ov_ref.dtype)
     ol_ref[...] = n[:, None]

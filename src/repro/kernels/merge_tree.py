@@ -33,6 +33,27 @@ mszip "issue" is one lock-step step of one partition pair across its S
 streams, counted only while that pair has active streams — identical to
 the host loop's per-iteration counts, because inactive pairs present
 empty fronts and advance nothing.
+
+This module is the **XLA oracle** for the merge stage: the native Pallas
+kernels (``kernels/merge_partitions.py``, ``kernels/fused_bucket.py``)
+are verified bit-identical against it, counters included
+(``tests/test_backend_parity.py``).
+
+Invariants shared by every merge implementation in this repo:
+
+  * merge inputs are per-row ascending and duplicate-free, EMPTY-padded
+    past their ``lens`` — EMPTY (INT32_MAX) must sort after every valid
+    key, which is what lets searchsorted/bitonic machinery ignore the
+    padding (garbage past ``lens`` is NOT tolerated by the union merge's
+    rank arithmetic);
+  * R (the mszip chunk width) is a power of two, and the zip-merge tree
+    needs C = L/R partitions with C a power of two (trailing empty
+    partitions merge as no-ops and cost no zip issues);
+  * the merge *payload* is rank/selection-based — values are gathered or
+    where-selected, and a cross-side duplicate accumulates as the single
+    IEEE add ``va + vb``.  Because each side is duplicate-free, that is
+    the only float operation the merge performs, which is why every
+    backend produces bit-identical values.
 """
 from __future__ import annotations
 

@@ -39,6 +39,18 @@ def test_registry_has_all_backends():
             assert callable(getattr(bk, prim)), (bk.name, prim)
 
 
+def test_pallas_backend_has_native_merge_and_fused_kernels():
+    """PR 5 left merge_partitions as an XLA seam on the pallas tier; it
+    is now the native bitonic-merge kernel, plus the single-kernel fused
+    bucket pipeline slot (other tiers compose sort + the XLA tree)."""
+    from repro.kernels import merge_tree
+    pallas = kb.get_backend("pallas")
+    assert pallas.merge_partitions is not merge_tree.merge_partitions
+    assert pallas.fused_bucket is not None
+    assert kb.get_backend("xla").fused_bucket is None
+    assert kb.get_backend("ref").fused_bucket is None
+
+
 def test_backend_capability_flags():
     assert kb.get_backend("xla").on_device
     assert kb.get_backend("pallas").on_device
@@ -166,6 +178,92 @@ if HAVE_HYPOTHESIS:
         keys/vals/lens and mssort/mszip counters bit-equal across
         backends."""
         _assert_backend_parity(S, C * R, R, seed)
+
+
+# ---------------------------------------------------------------------------
+# native-Pallas merge_partitions: bit-identity vs the XLA tree and the host
+# ---------------------------------------------------------------------------
+
+def _sorted_unique_partitions(rng, N, L, key_hi, force_empty=False):
+    """(N, L) EMPTY-padded ascending duplicate-free partitions — the
+    contract both merge_partitions backends share."""
+    keys = np.full((N, L), EMPTY, np.int32)
+    vals = np.zeros((N, L), np.float32)
+    lens = rng.integers(0, L + 1, N).astype(np.int32)
+    if force_empty and N > 0:
+        lens[rng.integers(0, N)] = 0
+    for s in range(N):
+        u = rng.choice(key_hi, size=min(int(lens[s]), key_hi), replace=False)
+        u.sort()
+        lens[s] = len(u)
+        keys[s, :len(u)] = u
+        vals[s, :len(u)] = rng.standard_normal(len(u))
+    return jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lens)
+
+
+def _assert_merge_partitions_parity(N, La, Lb, R, S, seed):
+    rng = np.random.default_rng(seed)
+    key_hi = 2 * (La + Lb) + 3
+    ka, va, la = _sorted_unique_partitions(rng, N, La, key_hi,
+                                           force_empty=True)
+    kbk, vb, lb = _sorted_unique_partitions(rng, N, Lb, key_hi)
+    outs = []
+    for backend in ("xla", "pallas"):
+        k, v, ln, cnt = kvstream.merge_partitions(
+            ka, va, la, kbk, vb, lb, R=R, pair_streams=S, backend=backend)
+        outs.append((k, v, ln, *cnt))
+    for i, (x, p) in enumerate(zip(*outs)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p),
+                                      err_msg=f"output {i}")
+
+
+@pytest.mark.parametrize("N,La,Lb,R,S", [
+    (4, 16, 16, 8, 2),    # two pairs
+    (1, 8, 24, 8, None),  # ragged sides, single pair
+    (6, 5, 3, 4, 3),      # non-pow2 widths (kernel pads to the network)
+    (3, 16, 0, 8, None),  # one side empty everywhere
+])
+def test_merge_partitions_pallas_bit_identical_to_xla(N, La, Lb, R, S):
+    _assert_merge_partitions_parity(N, La, Lb, R, S, seed=N + La + Lb)
+
+
+def test_merge_partitions_pallas_matches_host_merge_round():
+    """The pallas merge kernel vs the HOST chunk-loop driver: merged
+    streams and the exact n_mszip/zip_elems accounting."""
+    rng = np.random.default_rng(7)
+    N, La, Lb, R = 4, 24, 16, 8
+    ka, va, la = _sorted_unique_partitions(rng, N, La, 60)
+    kbk, vb, lb = _sorted_unique_partitions(rng, N, Lb, 60)
+    ka_n, va_n = np.asarray(ka), np.asarray(va)
+    kb_n, vb_n = np.asarray(kbk), np.asarray(vb)
+    stats = sg.SpzStats()
+    hk, hv, hl = sg.merge_round(
+        (ka_n, va_n, np.asarray(la).astype(np.int64)),
+        (kb_n, vb_n, np.asarray(lb).astype(np.int64)), R, "xla", stats)
+    k, v, ln, cnt = kvstream.merge_partitions(ka, va, la, kbk, vb, lb,
+                                              R=R, backend="pallas")
+    k, v, ln = np.asarray(k), np.asarray(v), np.asarray(ln)
+    np.testing.assert_array_equal(hl, ln)
+    for s in range(N):
+        np.testing.assert_array_equal(hk[s, :hl[s]], k[s, :ln[s]])
+        np.testing.assert_array_equal(hv[s, :hl[s]], v[s, :ln[s]])
+    assert int(cnt.n_mszip) == stats.n_mszip
+    assert int(cnt.zip_elems) == stats.zip_elems
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 6),            # N streams
+           st.integers(0, 3),            # La in chunks (0 => empty side)
+           st.integers(0, 3),            # Lb in chunks
+           st.sampled_from([4, 8, 16]),  # R chunk width
+           st.integers(0, 10_000))
+    def test_prop_merge_partitions_parity(N, Ca, Cb, R, seed):
+        """Random (S, L, R) partition pairs — empty and single-chunk
+        partitions included — bit-equal keys/vals/lens and exact
+        n_mszip/zip_elems/chunk counters across backends."""
+        S = N if seed % 2 else None  # alternate pair_streams accounting
+        _assert_merge_partitions_parity(N, Ca * R, Cb * R, R, S, seed)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,84 @@
+"""Docs-build smoke: validate markdown links in docs/ and README.md.
+
+Checks every inline markdown link (``[text](target)``) in the doc set:
+
+  * relative file targets must exist (anchors are stripped; a bare
+    ``#anchor`` is checked against the headings of its own file);
+  * ``docs/*.md`` targets of README links must themselves be in the
+    checked set, so a page can't be linked but never validated;
+  * http(s) links are NOT fetched (CI must not depend on the network) —
+    they are only syntax-checked.
+
+Exit code 0 when every link resolves, 1 with one line per broken link.
+No third-party dependencies; runs as a blocking step of the lint lane.
+
+Usage: python tools/check_docs_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links; images share the syntax modulo a leading '!'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans — link syntax inside
+    them is example text, not a link."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def _anchors(text: str) -> set[str]:
+    """GitHub-style heading anchors of one markdown document."""
+    out = set()
+    for title in _HEADING.findall(_strip_code(text)):
+        slug = re.sub(r"[^\w\- ]", "", title.strip().lower())
+        out.add(slug.replace(" ", "-"))
+    return out
+
+
+def check(root: Path) -> list[str]:
+    docs = sorted(root.glob("docs/*.md")) + [root / "README.md"]
+    errors = []
+    for doc in docs:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(root)}: file missing")
+            continue
+        text = doc.read_text()
+        anchors = _anchors(text)
+        for target in _LINK.findall(_strip_code(text)):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            rel = doc.relative_to(root)
+            if not path_part:  # same-file anchor
+                if anchor and anchor not in anchors:
+                    errors.append(f"{rel}: broken anchor #{anchor}")
+                continue
+            dest = (doc.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+            elif anchor and dest.suffix == ".md":
+                if anchor not in _anchors(dest.read_text()):
+                    errors.append(
+                        f"{rel}: broken anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parent.parent
+    errors = check(root.resolve())
+    for err in errors:
+        print(f"BROKEN: {err}", file=sys.stderr)
+    n_docs = len(list(root.glob('docs/*.md'))) + 1
+    print(f"checked {n_docs} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
