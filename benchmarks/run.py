@@ -460,12 +460,72 @@ def serve_bench(fast=False):
           f"reqs={n_chaos}|availability={cs.get('availability', 1.0):.4f}|"
           f"dead_letters={cs['n_dead_letters']}|degraded={cs['n_degraded']}|"
           f"retry_flush_rate={cs.get('flush_retry_rate', 0.0):.2f}")
-    degraded_p50 = cs.get("p50_latency_degraded_s",
-                          cs.get("p50_latency_s", 0.0))
-    _emit("serve.chaos.degraded", degraded_p50,
-          f"n_degraded={cs['n_degraded']}|"
-          f"p50_planned_us={cs.get('p50_latency_s', 0.0) * 1e6:.1f}|"
-          f"p50_degraded_us={degraded_p50 * 1e6:.1f}")
+    # p50_degraded_us only exists when degraded requests exist — a chaos
+    # run lucky enough to serve everything planned must not report the
+    # planned p50 as a fake "degraded" latency (compare_baselines skips
+    # rows whose baseline us_per_call is 0, so the timing gate tolerates
+    # either shape)
+    degraded_p50 = cs.get("p50_latency_degraded_s", 0.0)
+    degraded_info = f"n_degraded={cs['n_degraded']}|" \
+                    f"p50_planned_us={cs.get('p50_latency_s', 0.0) * 1e6:.1f}"
+    if cs["n_degraded"]:
+        degraded_info += f"|p50_degraded_us={degraded_p50 * 1e6:.1f}"
+    _emit("serve.chaos.degraded", degraded_p50, degraded_info)
+
+    # -- multi-process phase: the same bucketed service dispatching its
+    # flushes to a ProcessCoordinator worker pool (runtime/coordinator.py).
+    # Throughput rows run one full untimed pass first so per-worker jax
+    # import + kernel compile stay out of the timed window; the kill row
+    # runs cold so the SIGKILL lands inside the measured traffic.  On a
+    # single-core runner the w2/w4 rows measure dispatch overhead, not
+    # parallel speedup — the availability fraction is the real gate.
+    from repro.runtime.coordinator import ProcessCoordinator
+    n_mp = 24 if fast else 48
+
+    def _mp_traffic(pool, path, seed):
+        mp = SpGemmService(
+            max_batch=8, flush_timeout=0.05, engine="auto",
+            cache=dp.AutotuneCache(path), coordinator=pool,
+            policy=dp.RetryPolicy(max_attempts=3, backoff_base_s=0.0))
+        t0 = time.perf_counter()
+        for A, B in make_traffic(n_mp, seed=seed):
+            mp.submit(A, B)
+            mp.pump()
+        mp.drain()
+        return mp, time.perf_counter() - t0
+
+    def _mp_pool_run(n_workers, specs=None):
+        path = os.path.join(tempfile.mkdtemp(prefix="bench_mp_"),
+                            "autotune.json")
+        with ProcessCoordinator(n_workers, cache_path=path,
+                                fault_specs=specs, fault_seed=5) as pool:
+            if specs is None:
+                _mp_traffic(pool, path, seed=3)  # warm every worker
+            mp, wall = _mp_traffic(pool, path, seed=4)
+            return mp, wall, pool.alive_count, \
+                [e["event"] for e in pool.events]
+
+    for w in (1, 2, 4):
+        mp, wall, alive, _ = _mp_pool_run(w)
+        ms = mp.stats()
+        _emit(f"serve.multiproc.w{w}", wall / max(1, n_mp),
+              f"workers={w}|reqs={n_mp}|req_per_s={n_mp / wall:.1f}|"
+              f"availability={ms.get('availability', 1.0):.4f}|"
+              f"dead_letters={ms['n_dead_letters']}|alive={alive}")
+
+    mp, wall, alive, events = _mp_pool_run(2, specs={
+        0: [fi.FaultSpec(site="service.flush", kind="kill_process",
+                         max_fires=1),
+            fi.FaultSpec(site="kernel.batched", kind="raise", rate=0.10)],
+        1: [fi.FaultSpec(site="kernel.batched", kind="raise", rate=0.10)],
+    })
+    ks = mp.stats()
+    _emit("serve.multiproc.kill", wall / max(1, n_mp),
+          f"workers=2|reqs={n_mp}|"
+          f"availability={ks.get('availability', 1.0):.4f}|"
+          f"dead_letters={ks['n_dead_letters']}|"
+          f"worker_lost={events.count('worker_lost')}|"
+          f"restarts={events.count('restart')}|alive_at_drain={alive}")
 
 
 ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,

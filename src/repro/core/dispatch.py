@@ -277,6 +277,10 @@ def cache_key(A: CSR, B: CSR, backend: Optional[str] = None) -> str:
 # prefix (shape keys are "<rows>x<cols>@..." strings, so no collision)
 _QUAR_PREFIX = "!quarantine:"
 
+# returned by AutotuneCache._lock_file when a live holder kept the lock
+# past the bounded acquire window (distinct from None = "no locking")
+_LOCK_TIMEOUT = object()
+
 
 class AutotuneCache:
     """Disk-backed map cache_key -> {engine, source[, backend]}.
@@ -298,17 +302,36 @@ class AutotuneCache:
     read-merge-write critical section across processes — on platforms
     without ``fcntl`` the lock is a no-op and the merge falls back to
     the previous shrunk-loss-window behaviour, where a dropped entry
-    only costs a re-measurement, never correctness."""
+    only costs a re-measurement, never correctness.  The lock acquire
+    is *bounded* (``lock_timeout_s``, default 0.5s or
+    ``$REPRO_AUTOTUNE_LOCK_TIMEOUT_S``): a hung — not dead — lock
+    holder costs a skipped flush, never a stalled serving process.
 
-    def __init__(self, path: Optional[str] = None):
+    Cross-process propagation protocol (the multi-process serving
+    substrate): **push on quarantine** — ``quarantine()`` flushes
+    immediately, so a combo poisoned by one worker process lands on
+    disk right away, not at process exit; **pull on plan miss** —
+    ``plan()``/``plan_batched()`` call :meth:`refresh` before giving up
+    on a cache miss, so a fresh bucket picks up selections and poison
+    other processes pushed since this process loaded the file.  Net
+    effect: a kernel crash observed in one process is routed around by
+    every process within one flush interval."""
+
+    def __init__(self, path: Optional[str] = None, *,
+                 lock_timeout_s: Optional[float] = None):
         self.path = path or os.environ.get(
             "REPRO_AUTOTUNE_CACHE",
             os.path.join(os.path.expanduser("~"), ".cache", "repro",
                          "spgemm_autotune.json"))
         self._entries: Optional[dict] = None
         # bumped whenever a memoized plan may have been invalidated
-        # (autotune upgrades, clears) — keyed into the plan memo
+        # (autotune upgrades, clears, pulled quarantines) — keyed into
+        # the plan memo
         self.version = 0
+        if lock_timeout_s is None:
+            lock_timeout_s = float(os.environ.get(
+                "REPRO_AUTOTUNE_LOCK_TIMEOUT_S", "0.5"))
+        self.lock_timeout_s = lock_timeout_s
 
     def _read_disk(self) -> Optional[dict]:
         """Parse the on-disk file; {} when missing, None when corrupt."""
@@ -397,20 +420,102 @@ class AutotuneCache:
                 for c in q.get("combos", ())]
 
     def _lock_file(self):
-        """Open + exclusively lock ``<path>.lock``; None when unavailable.
+        """Open + exclusively lock ``<path>.lock``.
 
-        flock serializes the flush's read-merge-write across processes
-        (and across cache objects in one process — each open is its own
-        file description).  Purely best-effort: any failure degrades to
-        the unlocked merge, never to a failed multiply."""
+        Returns the locked file object, ``None`` when locking is
+        unavailable (no ``fcntl``, open failure — the unlocked merge
+        proceeds), or the :data:`_LOCK_TIMEOUT` sentinel when a live
+        holder kept the lock past ``lock_timeout_s`` — the caller skips
+        the flush entirely rather than stalling the serving process
+        behind a hung peer.  flock serializes the flush's
+        read-merge-write across processes (and across cache objects in
+        one process — each open is its own file description).  Purely
+        best-effort: any failure degrades to a skipped or unlocked
+        merge, never to a failed multiply."""
         if fcntl is None:
             return None
         try:
             f = open(self.path + ".lock", "a")
-            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
-            return f
         except OSError:
             return None
+        deadline = time.monotonic() + max(0.0, self.lock_timeout_s)
+        while True:
+            try:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX | fcntl.LOCK_NB)
+                return f
+            except OSError:
+                if time.monotonic() >= deadline:
+                    try:
+                        f.close()
+                    except OSError:
+                        pass
+                    return _LOCK_TIMEOUT
+                time.sleep(0.01)
+
+    def _merge_from(self, disk: dict) -> bool:
+        """Merge on-disk entries into memory; True when anything changed.
+
+        Entries concurrent processes flushed since we loaded are kept;
+        their measured plans beat our heuristics (quarantine records
+        merge by union — a combo poisoned by any process stays
+        poisoned).  After the merge, selections routing to poisoned
+        combos are swept: the merge may have resurrected a selection
+        this process just quarantined (its stale disk entry merged back
+        in), or pulled in a selection another process has since
+        poisoned."""
+        changed = False
+        for k, v in disk.items():
+            ours = self._entries.get(k)
+            if k.startswith(_QUAR_PREFIX):
+                if ours is None:
+                    self._entries[k] = v
+                    changed = True
+                else:
+                    for c in v.get("combos", ()):
+                        if c not in ours["combos"]:
+                            ours["combos"].append(c)
+                            changed = True
+                continue
+            if ours is None or (v.get("source") == "autotune"
+                                and ours.get("source") != "autotune"):
+                if ours != v:
+                    self._entries[k] = v
+                    changed = True
+        for qk, q in list(self._entries.items()):
+            if not qk.startswith(_QUAR_PREFIX):
+                continue
+            sk = qk[len(_QUAR_PREFIX):]
+            sel = self._entries.get(sk)
+            if sel is None:
+                continue
+            combos = set(q.get("combos", ()))
+            if (self._combo(sel.get("engine", ""), sel.get("backend"))
+                    in combos
+                    or self._combo(sel.get("engine", ""), None)
+                    in combos):
+                self._entries.pop(sk, None)
+                changed = True
+        return changed
+
+    def refresh(self) -> bool:
+        """Pull entries other processes flushed since our last read.
+
+        The "pull" half of the cross-process propagation protocol:
+        called on a plan-cache miss (and available to supervisors on
+        worker-loss events), it merges the current on-disk state into
+        memory without writing anything back.  Bumps :attr:`version`
+        when the merge changed anything, so memoized plans built on the
+        stale view are invalidated.  Returns whether anything changed."""
+        if self._entries is None:
+            self._load()
+            return True
+        disk = self._read_disk()
+        if not disk:
+            return False
+        changed = self._merge_from(disk)
+        if changed:
+            self.version += 1
+        return changed
 
     def _flush(self) -> None:
         tmp = None
@@ -418,41 +523,15 @@ class AutotuneCache:
         try:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
             lock = self._lock_file()
+            if lock is _LOCK_TIMEOUT:
+                # a hung (not dead) holder: skip this flush — the
+                # entries stay in memory and the next flush retries;
+                # a skipped write costs a re-measurement, a stall
+                # costs the serving process
+                lock = None
+                return
             fi.fire("autotune.flush", path=self.path)
-            # read-merge-write: keep entries concurrent processes flushed
-            # since we loaded; their measured plans beat our heuristics
-            # (quarantine records merge by union — a combo poisoned by
-            # any process stays poisoned)
-            disk = self._read_disk() or {}
-            for k, v in disk.items():
-                ours = self._entries.get(k)
-                if k.startswith(_QUAR_PREFIX):
-                    if ours is None:
-                        self._entries[k] = v
-                    else:
-                        for c in v.get("combos", ()):
-                            if c not in ours["combos"]:
-                                ours["combos"].append(c)
-                    continue
-                if ours is None or (v.get("source") == "autotune"
-                                    and ours.get("source") != "autotune"):
-                    self._entries[k] = v
-            # the merge may have resurrected a selection this process
-            # just quarantined (its stale disk entry merged back in):
-            # sweep selections routing to poisoned combos
-            for qk, q in list(self._entries.items()):
-                if not qk.startswith(_QUAR_PREFIX):
-                    continue
-                sk = qk[len(_QUAR_PREFIX):]
-                sel = self._entries.get(sk)
-                if sel is None:
-                    continue
-                combos = set(q.get("combos", ()))
-                if (self._combo(sel.get("engine", ""), sel.get("backend"))
-                        in combos
-                        or self._combo(sel.get("engine", ""), None)
-                        in combos):
-                    self._entries.pop(sk, None)
+            self._merge_from(self._read_disk() or {})
             fd, tmp = tempfile.mkstemp(
                 dir=os.path.dirname(self.path) or ".",
                 prefix=os.path.basename(self.path) + ".tmp.")
@@ -716,6 +795,12 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
     selected, source, rule, sel_bk = engine, "explicit", None, None
     if engine == "auto":
         hit = cache.get(key) if use_cache else None
+        if hit is None and use_cache:
+            # pull-on-plan-miss: another process may have measured (or
+            # poisoned) this bucket since we loaded the file — one
+            # cheap disk read here beats re-measuring or re-crashing
+            cache.refresh()
+            hit = cache.get(key)
         if hit is not None and cache.is_quarantined(
                 key, hit["engine"], hit.get("backend")):
             hit = None  # a poisoned prior selection must not be replayed
@@ -1202,6 +1287,11 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
         if cache is None:
             cache = default_cache()
         hit = cache.get(key) if use_cache else None
+        if hit is None and use_cache:
+            # pull-on-plan-miss (see plan()): pick up selections and
+            # quarantines flushed by sibling worker processes
+            cache.refresh()
+            hit = cache.get(key)
         if hit is not None and cache.is_quarantined(
                 key, hit["engine"], hit.get("backend")):
             hit = None  # a poisoned prior selection must not be replayed

@@ -16,6 +16,16 @@ dead-letter queue:
 
   PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
       --inject-rate 0.1 --kill-worker 0 --deadline 30 --max-attempts 3
+
+Multi-process mode spreads flushes over a supervised pool of spawned
+worker processes (``runtime/coordinator.py``); ``--kill-worker-proc``
+SIGKILLs worker process 0 mid-flush to demonstrate cross-process
+recovery (the task re-runs on a survivor; availability stays 1.0):
+
+  PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
+      --workers 4
+  PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
+      --workers 2 --kill-worker-proc --inject-rate 0.1
 """
 from __future__ import annotations
 
@@ -90,19 +100,47 @@ def main() -> None:
                          "walking the degradation ladder")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="seed for the fault-injection RNG")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="multi-process mode: dispatch flushes to a "
+                         "supervised pool of N spawned worker processes "
+                         "(0 = in-process serving)")
+    ap.add_argument("--kill-worker-proc", action="store_true",
+                    help="SIGKILL worker process 0 once, mid-flush "
+                         "(requires --workers >= 1)")
     args = ap.parse_args()
 
     cache = dp.AutotuneCache(args.cache or os.path.join(
         tempfile.mkdtemp(prefix="serve_spgemm_"), "autotune.json"))
     policy = dp.RetryPolicy(max_attempts=args.max_attempts,
                             deadline_s=args.deadline)
+
+    coordinator = None
+    if args.workers > 0:
+        from repro.runtime.coordinator import ProcessCoordinator
+        # chaos specs are re-armed *inside* each worker process (they
+        # must be picklable, so in-process kill_worker_spec does not
+        # apply here — --kill-worker-proc kills the real process)
+        pool_specs: dict = {}
+        if args.inject_rate > 0.0:
+            common = [fi.FaultSpec(site="kernel.batched", kind="raise",
+                                   rate=args.inject_rate)]
+            pool_specs = {i: list(common) for i in range(args.workers)}
+        if args.kill_worker_proc:
+            pool_specs.setdefault(0, []).append(
+                fi.FaultSpec(site="service.flush", kind="kill_process",
+                             max_fires=1))
+        coordinator = ProcessCoordinator(
+            args.workers, cache_path=cache.path,
+            engine=args.engine,
+            fault_specs=pool_specs or None, fault_seed=args.chaos_seed)
+
     service = SpGemmService(max_batch=args.max_batch,
                             flush_timeout=args.timeout,
                             engine=args.engine, cache=cache,
-                            policy=policy)
+                            policy=policy, coordinator=coordinator)
 
     specs = []
-    if args.inject_rate > 0.0:
+    if args.workers == 0 and args.inject_rate > 0.0:
         specs.append(fi.FaultSpec(site="kernel.batched", kind="raise",
                                   rate=args.inject_rate))
     if args.kill_worker is not None:
@@ -129,6 +167,12 @@ def main() -> None:
                 snap = (len(service.completed), len(service.flush_log))
         service.drain()
     wall = time.perf_counter() - t0
+    if coordinator is not None:
+        events = [e["event"] for e in coordinator.events]
+        print(f"# pool: {args.workers} workers, "
+              f"{coordinator.alive_count} alive at drain | events: "
+              + ",".join(f"{e}x{events.count(e)}" for e in sorted(set(events))))
+        coordinator.shutdown()
 
     full = service.stats()
     steady = service.stats(since_request=snap[0], since_flush=snap[1])
@@ -143,7 +187,8 @@ def main() -> None:
               f"p50={s['p50_latency_s'] * 1e3:.2f}ms "
               f"p95={s['p95_latency_s'] * 1e3:.2f}ms | "
               f"plan_hit_rate={s.get('plan_hit_rate', 0.0):.2f}")
-    if args.inject_rate > 0.0 or args.kill_worker is not None:
+    if args.inject_rate > 0.0 or args.kill_worker is not None \
+            or args.kill_worker_proc:
         tiers: dict = {}
         for r in service.completed:
             tiers[r.tier] = tiers.get(r.tier, 0) + 1

@@ -1,0 +1,572 @@
+"""Cross-process worker supervision for multi-process SpGEMM serving.
+
+PR 6's resilience layer stops at the process boundary: ``WorkerLost``
+recovery, quarantine, and the degradation ladder all live inside one
+Python process.  This module is the scale-out step: a
+:class:`ProcessCoordinator` spawns a pool of **worker processes**
+(multiprocessing, spawn context), each owning a slice of device lanes
+(partitioned by :func:`repro.runtime.elastic.remesh_lanes` and realised
+as a per-worker ``make_lane_mesh``), and supervises them the way
+``distributed/spgemm_shard._execute_groups`` supervises in-process
+shard workers — generalised to real processes that can be SIGKILLed:
+
+  * **task dispatch** — the serving layer submits *flush tasks*
+    (a pad bucket's worth of packed CSR pairs); the coordinator routes
+    each to the least-loaded live worker, which runs the task through a
+    local :class:`~repro.serving.spgemm_service.SpGemmService` — so
+    every worker process carries the full PR 6 ladder (retries,
+    degradation, per-request isolation, structured dead letters);
+  * **death detection** — a killed worker is noticed by pipe EOF (plus
+    ``exitcode``); its in-flight tasks are re-queued onto survivors
+    (preferring a *different* worker), so a SIGKILL mid-flush costs
+    latency, never a dropped request;
+  * **hang detection** — a worker whose oldest in-flight task ages past
+    ``task_timeout_s`` is declared hung, SIGKILLed, and treated as
+    lost; idle workers are liveness-checked with ping/pong heartbeats
+    (:meth:`heartbeat`) under ``heartbeat_timeout_s``;
+  * **bounded restarts** — each lost worker is respawned at most
+    ``max_worker_restarts`` times; past the budget it stays dead and
+    the pool shrinks;
+  * **elastic re-meshing** — every membership change re-partitions the
+    lane space over the live workers (``elastic.remesh_lanes``) and
+    tells each survivor to rebuild its lane mesh, so a shrunken pool
+    spreads over the full device set and a restarted worker grows it
+    back;
+  * **shared state by protocol, not by pipe** — workers share the
+    autotune + quarantine cache through its on-disk file: quarantine
+    pushes immediately (``AutotuneCache.quarantine`` flushes) and plan
+    misses pull (``AutotuneCache.refresh``), so a kernel crash observed
+    in worker A is routed around by worker B without B ever executing
+    the poisoned combo;
+  * **total loss is survivable** — when no worker is live and no
+    restart budget remains, queued work is handed back marked
+    ``pool_lost`` and :meth:`submit` raises :class:`PoolLost`; the
+    serving layer's in-process degradation ladder is the fallback.
+
+Fault injection composes: per-worker :class:`~repro.runtime.faultinject.
+FaultSpec` lists (picklable — no lambdas) are re-armed inside each
+spawned process, so chaos tests arm a ``kill_process`` spec in worker 0
+and 10% kernel faults everywhere, then assert availability 1.0.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import multiprocessing as mp
+import multiprocessing.connection as mpc
+import os
+import signal
+import sys
+import time
+from typing import Any, Optional, Sequence, Union
+
+from repro.runtime import faultinject as fi
+
+
+class PoolLost(RuntimeError):
+    """Every worker is dead and the restart budget is exhausted."""
+
+
+# ---------------------------------------------------------------------------
+# task payloads: packed (host numpy) CSR pairs, picklable end to end
+# ---------------------------------------------------------------------------
+
+
+def pack_csr(m) -> tuple:
+    """CSR -> (indptr, indices, data, shape) host-numpy tuple.
+
+    Device arrays are pulled to host before pickling so the payload
+    crosses the process boundary without touching jax transfer guards."""
+    import numpy as np
+    return (np.asarray(m.indptr), np.asarray(m.indices),
+            np.asarray(m.data), tuple(m.shape))
+
+
+def unpack_csr(t):
+    """Inverse of :func:`pack_csr` (device placement is the unpacker's)."""
+    import jax.numpy as jnp
+    from repro.core.formats import CSR
+    return CSR(jnp.asarray(t[0]), jnp.asarray(t[1]), jnp.asarray(t[2]),
+               tuple(t[3]))
+
+
+def make_flush_payload(reqs, *, bucket: tuple, engine: str, max_batch: int,
+                       policy=None) -> dict:
+    """Build a flush-task payload from service requests (id order kept)."""
+    payload: dict[str, Any] = {
+        "bucket": bucket,
+        "pairs": [(pack_csr(r.A), pack_csr(r.B)) for r in reqs],
+        "engine": engine,
+        "max_batch": max_batch,
+    }
+    if policy is not None:
+        payload["policy"] = {
+            "max_attempts": policy.max_attempts,
+            "backoff_base_s": policy.backoff_base_s,
+            "backoff_factor": policy.backoff_factor,
+            "fallback": tuple(policy.fallback),
+        }
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# the worker process
+# ---------------------------------------------------------------------------
+
+
+def _run_flush(payload: dict, *, cache, mesh) -> dict:
+    """Execute one flush task through a local SpGemmService.
+
+    The local service is the whole PR 6 stack in miniature: planned
+    sharded tier with retries, the degradation ladder, per-request
+    isolation — its quarantines push to the shared cache file and its
+    plan misses pull from it.  Returns per-request outcomes (packed
+    results or structured errors, id order preserved) plus the flush's
+    provenance record."""
+    from repro.core import dispatch as dp
+    from repro.serving.spgemm_service import SpGemmService
+
+    pairs = payload["pairs"]
+    pol = payload.get("policy")
+    policy = dp.RetryPolicy(**pol) if pol else dp.RetryPolicy()
+    svc = SpGemmService(
+        max_batch=max(int(payload.get("max_batch", len(pairs))), len(pairs)),
+        flush_timeout=0.0, engine=payload.get("engine", "auto"),
+        mesh=mesh, cache=cache, policy=policy)
+    reqs = [svc.submit(unpack_csr(a), unpack_csr(b)) for a, b in pairs]
+    svc.drain()
+    outcomes = []
+    for r in reqs:
+        if r.error is not None:
+            outcomes.append({"ok": False, "stage": r.error.stage,
+                             "kind": r.error.kind,
+                             "message": r.error.message,
+                             "attempts": r.error.attempts})
+        else:
+            outcomes.append({"ok": True, "result": pack_csr(r.result),
+                             "engine": r.engine, "tier": r.tier})
+    f = svc.flush_log[-1] if svc.flush_log else None
+    flush = None
+    if f is not None:
+        flush = {"engine": f.engine, "source": f.source, "tier": f.tier,
+                 "attempts": f.attempts, "errors": list(f.errors),
+                 "wall_s": f.wall_s}
+    return {"outcomes": outcomes, "flush": flush}
+
+
+def _worker_main(conn, worker_id: int, init: dict) -> None:
+    """Entry point of a spawned worker (module top level: picklable).
+
+    Protocol (parent -> worker): ``("task", id, payload)``,
+    ``("ping", seq)``, ``("remesh", n_lanes)``, ``("stop",)``.
+    Worker -> parent: ``("ready", pid, n_devices)``,
+    ``("result", id, out)``, ``("error", id, kind, message)``,
+    ``("pong", seq)``.  One task at a time — parallelism is across
+    workers, serialization within one is what makes re-queue exact."""
+    for p in reversed(init.get("sys_path", [])):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    specs = init.get("fault_specs") or []
+    if specs:
+        fi.install(fi.FaultInjector(
+            specs, seed=int(init.get("fault_seed", 0)) + worker_id))
+    # heavy imports after fault arming, before "ready": a worker that
+    # cannot import does not count as started
+    import jax
+    from repro.core import dispatch as dp
+    from repro.launch.mesh import make_lane_mesh
+
+    n_dev = len(jax.devices())
+    n_lanes = max(1, min(int(init.get("n_lanes", 1)), n_dev))
+    mesh = make_lane_mesh(n_lanes)
+    cache = (dp.AutotuneCache(init["cache_path"])
+             if init.get("cache_path") else dp.default_cache())
+    conn.send(("ready", os.getpid(), n_dev))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break  # parent is gone; nothing left to serve
+        tag = msg[0]
+        if tag == "stop":
+            break
+        if tag == "ping":
+            conn.send(("pong", msg[1]))
+            continue
+        if tag == "remesh":
+            n_lanes = max(1, min(int(msg[1]), n_dev))
+            mesh = make_lane_mesh(n_lanes)
+            continue
+        # ("task", task_id, payload)
+        _, task_id, payload = msg
+        try:
+            out = _run_flush(payload, cache=cache, mesh=mesh)
+            conn.send(("result", task_id, out))
+        except Exception as e:
+            try:
+                conn.send(("error", task_id, type(e).__name__, str(e)))
+            except (OSError, ValueError):
+                break
+    try:
+        conn.close()
+    except OSError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the coordinator (parent side)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Task:
+    id: int
+    payload: dict
+    tries: int = 0
+
+
+class _Worker:
+    """Parent-side handle: process, pipe, budget, in-flight bookkeeping."""
+
+    def __init__(self, worker_id: int):
+        self.id = worker_id
+        self.proc = None
+        self.conn = None
+        self.alive = False
+        self.restarts = 0
+        self.in_flight: dict[int, _Task] = {}
+        self.dispatched_at: dict[int, float] = {}
+        self.ping_sent: Optional[float] = None
+        self.n_devices = 0
+
+
+class ProcessCoordinator:
+    """Spawn, feed, and supervise a pool of SpGEMM worker processes.
+
+    n_workers:           pool size.
+    n_lanes:             device-lane space partitioned over the pool
+                         (default: the parent's visible device count).
+    cache_path:          shared autotune/quarantine cache file; every
+                         worker opens its own ``AutotuneCache`` on it
+                         (push-on-quarantine / pull-on-plan-miss make
+                         it a coordinator-free shared KV).
+    fault_specs:         chaos: a list of picklable ``FaultSpec``s armed
+                         in every worker, or a dict ``{worker_id:
+                         [specs]}`` for targeted kills.  Re-armed on
+                         restart (a respawned worker runs the same
+                         binary under the same chaos).
+    max_worker_restarts: respawn budget *per worker slot*.
+    max_task_retries:    re-dispatch budget per task before it is
+                         returned as ``pool_lost`` (guards against a
+                         task that kills every worker it touches).
+    task_timeout_s:      age at which an in-flight task declares its
+                         worker hung (None disables).
+    heartbeat_timeout_s: unanswered-ping age at which an *idle* worker
+                         is declared dead.
+    start_timeout_s:     max wait for a spawned worker's ready
+                         handshake.
+    """
+
+    def __init__(self, n_workers: int, *,
+                 n_lanes: Optional[int] = None,
+                 cache_path: Optional[str] = None,
+                 engine: str = "auto",
+                 fault_specs: Union[Sequence[fi.FaultSpec],
+                                    dict, None] = None,
+                 fault_seed: int = 0,
+                 max_worker_restarts: int = 3,
+                 max_task_retries: int = 3,
+                 task_timeout_s: Optional[float] = 120.0,
+                 heartbeat_timeout_s: float = 10.0,
+                 start_timeout_s: float = 120.0):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if n_lanes is None:
+            import jax
+            n_lanes = len(jax.devices())
+        self.n_lanes = max(1, int(n_lanes))
+        self.cache_path = cache_path
+        self.engine = engine
+        self.fault_specs = fault_specs
+        self.fault_seed = fault_seed
+        self.max_worker_restarts = max_worker_restarts
+        self.max_task_retries = max_task_retries
+        self.task_timeout_s = task_timeout_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.start_timeout_s = start_timeout_s
+        self._ctx = mp.get_context("spawn")
+        self._workers = [_Worker(i) for i in range(n_workers)]
+        self._queue: collections.deque[_Task] = collections.deque()
+        self._next_task = 0
+        self.events: list[dict] = []  # supervision log (tests assert on it)
+        lanes = self._partition(n_workers)
+        for w, nl in zip(self._workers, lanes):
+            self._spawn(w, nl)
+        if not self._alive():
+            raise PoolLost("no worker survived startup")
+
+    # -- membership ------------------------------------------------------
+
+    def _alive(self) -> list[_Worker]:
+        return [w for w in self._workers if w.alive]
+
+    @property
+    def alive_count(self) -> int:
+        return len(self._alive())
+
+    def _partition(self, n: int) -> list[int]:
+        from repro.runtime.elastic import remesh_lanes
+        return [len(r) for r in remesh_lanes(self.n_lanes, max(n, 1))]
+
+    def _specs_for(self, worker_id: int) -> list:
+        s = self.fault_specs
+        if s is None:
+            return []
+        if isinstance(s, dict):
+            s = s.get(worker_id, [])
+        # fresh copies: fire counters must not leak across restarts or
+        # into the parent's own spec objects
+        return [dataclasses.replace(spec, fires=0) for spec in s]
+
+    def _spawn(self, w: _Worker, n_lanes: int) -> bool:
+        init = {
+            "sys_path": list(sys.path),
+            "cache_path": self.cache_path,
+            "n_lanes": n_lanes,
+            "fault_specs": self._specs_for(w.id),
+            "fault_seed": self.fault_seed,
+        }
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(target=_worker_main,
+                                 args=(child_conn, w.id, init), daemon=True)
+        proc.start()
+        child_conn.close()  # our copy — EOF must propagate on child death
+        w.proc, w.conn = proc, parent_conn
+        w.ping_sent = None
+        if not parent_conn.poll(self.start_timeout_s):
+            self._kill(w)
+            self.events.append({"event": "start_timeout", "worker": w.id})
+            return False
+        try:
+            tag, pid, n_dev = parent_conn.recv()
+        except (EOFError, OSError):
+            self._kill(w)
+            self.events.append({"event": "start_died", "worker": w.id})
+            return False
+        w.alive = tag == "ready"
+        w.n_devices = n_dev
+        self.events.append({"event": "spawn", "worker": w.id, "pid": pid,
+                            "n_lanes": n_lanes})
+        return w.alive
+
+    def _kill(self, w: _Worker) -> None:
+        w.alive = False
+        if w.proc is not None and w.proc.is_alive():
+            try:
+                os.kill(w.proc.pid, signal.SIGKILL)
+            except (OSError, TypeError):
+                pass
+        if w.proc is not None:
+            w.proc.join(timeout=5.0)
+        if w.conn is not None:
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+        w.conn = None
+
+    def _remesh(self) -> None:
+        """Re-partition lanes over the live workers and tell each one.
+
+        The elastic shrink/grow step: a 4-worker pool losing one spreads
+        the lane space over the remaining 3; a restart spreads it back."""
+        alive = self._alive()
+        if not alive:
+            return
+        lanes = self._partition(len(alive))
+        for w, nl in zip(alive, lanes):
+            try:
+                w.conn.send(("remesh", nl))
+            except (OSError, ValueError):
+                pass  # a dying worker is caught by the next poll
+        self.events.append({"event": "remesh", "workers": len(alive),
+                            "lanes": lanes})
+
+    def _on_worker_lost(self, w: _Worker, why: str,
+                        out: list) -> None:
+        """Requeue a dead worker's tasks, respawn within budget, remesh."""
+        orphans = list(w.in_flight.values())
+        w.in_flight.clear()
+        w.dispatched_at.clear()
+        self._kill(w)
+        self.events.append({"event": "worker_lost", "worker": w.id,
+                            "why": why, "orphans": [t.id for t in orphans]})
+        if w.restarts < self.max_worker_restarts:
+            w.restarts += 1
+            n = self._partition(len(self._alive()) + 1)[-1]
+            if self._spawn(w, n):
+                self.events.append({"event": "restart", "worker": w.id,
+                                    "n": w.restarts})
+        # a killed worker's buckets re-run on survivors — preferring a
+        # different worker, so a task that keeps killing its host makes
+        # progress instead of chasing the respawn
+        for t in orphans:
+            t.tries += 1
+            if t.tries > self.max_task_retries:
+                self.events.append({"event": "task_abandoned", "task": t.id})
+                out.append((t.id, {"pool_lost": True,
+                                   "why": f"retries exhausted ({why})"}))
+            elif not self._dispatch(t, avoid=w.id):
+                self._queue.append(t)
+        self._remesh()
+
+    # -- dispatch --------------------------------------------------------
+
+    def _dispatch(self, t: _Task, avoid: Optional[int] = None,
+                  prefer: Optional[int] = None) -> bool:
+        """Send a task to the least-loaded live worker; False if none."""
+        alive = [w for w in self._alive() if w.id != avoid] or self._alive()
+        if not alive:
+            return False
+        preferred = [w for w in alive if w.id == prefer]
+        w = preferred[0] if preferred \
+            else min(alive, key=lambda w: len(w.in_flight))
+        try:
+            w.conn.send(("task", t.id, t.payload))
+        except (OSError, ValueError):
+            return False  # worker died under us; poll will reap it
+        w.in_flight[t.id] = t
+        w.dispatched_at[t.id] = time.monotonic()
+        return True
+
+    def _drain_queue(self) -> None:
+        while self._queue and self._dispatch(self._queue[0]):
+            self._queue.popleft()
+
+    def submit(self, payload: dict,
+               prefer: Optional[int] = None) -> int:
+        """Queue one flush task; returns its task id.
+
+        ``prefer`` pins the task to a worker id when that worker is
+        live (tests use it to sequence cross-worker scenarios; the
+        default is least-loaded).  Raises :class:`PoolLost` when no
+        worker is live and none can be respawned — the caller's
+        in-process ladder takes over."""
+        if not self._alive():
+            raise PoolLost("no live workers")
+        t = _Task(self._next_task, payload)
+        self._next_task += 1
+        if not self._dispatch(t, prefer=prefer):
+            self._queue.append(t)
+        return t.id
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._queue) + sum(len(w.in_flight)
+                                      for w in self._workers)
+
+    # -- supervision loop ------------------------------------------------
+
+    def _handle(self, w: _Worker, msg: tuple, out: list) -> None:
+        tag = msg[0]
+        if tag == "pong":
+            w.ping_sent = None
+            return
+        if tag == "result":
+            _, tid, res = msg
+            t = w.in_flight.pop(tid, None)
+            w.dispatched_at.pop(tid, None)
+            if t is not None:
+                out.append((tid, res))
+            return
+        if tag == "error":
+            _, tid, kind, message = msg
+            t = w.in_flight.pop(tid, None)
+            w.dispatched_at.pop(tid, None)
+            self.events.append({"event": "task_error", "task": tid,
+                                "worker": w.id, "kind": kind})
+            if t is not None:
+                out.append((tid, {"error": {"kind": kind,
+                                            "message": message}}))
+
+    def _check_hangs(self, out: list) -> None:
+        if self.task_timeout_s is None:
+            return
+        now = time.monotonic()
+        for w in self._alive():
+            if w.dispatched_at and \
+                    now - min(w.dispatched_at.values()) > self.task_timeout_s:
+                self._on_worker_lost(w, "task timeout", out)
+
+    def poll(self, timeout: float = 0.0) -> list[tuple[int, dict]]:
+        """Drain finished tasks: [(task_id, result_dict)].
+
+        A result dict is the worker's ``{"outcomes": ..., "flush": ...}``
+        on success, ``{"error": {...}}`` on an infrastructural failure
+        inside a live worker, or ``{"pool_lost": True, ...}`` when the
+        task ran out of workers to die on.  Death, hang, and restart
+        handling all happen inside this call."""
+        out: list[tuple[int, dict]] = []
+        deadline = time.monotonic() + max(0.0, timeout)
+        while True:
+            conns = {w.conn: w for w in self._alive()}
+            if not conns:
+                # total pool loss: hand every remaining task back
+                for t in list(self._queue):
+                    out.append((t.id, {"pool_lost": True,
+                                       "why": "no live workers"}))
+                self._queue.clear()
+                return out
+            wait_s = max(0.0, deadline - time.monotonic())
+            ready = mpc.wait(list(conns), timeout=wait_s)
+            for conn in ready:
+                w = conns[conn]
+                try:
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    code = w.proc.exitcode if w.proc is not None else None
+                    self._on_worker_lost(w, f"pipe EOF (exit {code})", out)
+                    continue
+                self._handle(w, msg, out)
+            self._check_hangs(out)
+            self._drain_queue()
+            if out or time.monotonic() >= deadline:
+                return out
+
+    def heartbeat(self) -> None:
+        """Ping idle workers; reap the ones that stopped answering.
+
+        Busy workers are covered by ``task_timeout_s`` — a worker
+        grinding a flush cannot answer pings and must not die for it."""
+        now = time.monotonic()
+        for w in self._alive():
+            if w.in_flight:
+                continue
+            if w.ping_sent is None:
+                try:
+                    w.conn.send(("ping", now))
+                    w.ping_sent = now
+                except (OSError, ValueError):
+                    self._on_worker_lost(w, "ping send failed", [])
+            elif now - w.ping_sent > self.heartbeat_timeout_s:
+                self._on_worker_lost(w, "heartbeat timeout", [])
+
+    # -- lifecycle -------------------------------------------------------
+
+    def shutdown(self) -> None:
+        for w in self._workers:
+            if w.alive and w.conn is not None:
+                try:
+                    w.conn.send(("stop",))
+                except (OSError, ValueError):
+                    pass
+        for w in self._workers:
+            if w.proc is not None:
+                w.proc.join(timeout=5.0)
+            self._kill(w)
+
+    def __enter__(self) -> "ProcessCoordinator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

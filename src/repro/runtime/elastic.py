@@ -38,3 +38,32 @@ def remesh(n_devices: int, *, multi_pod: bool = False):
         data = len(devs) // model
         return jax.make_mesh((data, model), ("data", "model"),
                              devices=devs[: data * model])
+
+
+def remesh_lanes(n_lanes: int, n_workers: int) -> list[range]:
+    """Partition ``n_lanes`` device lanes over ``n_workers`` processes.
+
+    The lane-sharding analogue of :func:`remesh`, used by the process
+    coordinator (``runtime/coordinator.py``) to (re)assign lane
+    ownership when workers join or leave: contiguous slices, sizes
+    differing by at most one, earlier workers taking the remainder.
+    With more workers than lanes, the surplus workers share lane 0
+    (every worker must own at least one lane to be schedulable — a
+    lane-less worker could never run a flush).  Deterministic in
+    (n_lanes, n_workers), so every process computes the same partition
+    without coordination."""
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    if n_workers > n_lanes:
+        # surplus workers share lane 0 rather than idling
+        return [range(0, 1) if i >= n_lanes else range(i, i + 1)
+                for i in range(n_workers)]
+    base, rem = divmod(n_lanes, n_workers)
+    out, lo = [], 0
+    for i in range(n_workers):
+        hi = lo + base + (1 if i < rem else 0)
+        out.append(range(lo, hi))
+        lo = hi
+    return out

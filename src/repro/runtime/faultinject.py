@@ -66,6 +66,12 @@ class FaultSpec:
                             a deadline policy);
                "call"    -> invoke ``action(**ctx)`` (escape hatch —
                             e.g. scribble garbage into a cache file);
+               "kill_process" -> SIGKILL the *current process* — no
+                            cleanup, no exception propagation, exactly
+                            what a chaos test means by "the worker
+                            process died mid-flush".  Unlike "call",
+                            the spec stays picklable, so it can ride a
+                            task payload into a spawned worker;
                "nan"     -> corrupt values of a CSR/BatchedCSR result
                             with non-finite payloads (:func:`corrupt`
                             sites only);
@@ -125,7 +131,8 @@ class FaultInjector:
 
     def fire(self, site: str, **ctx) -> None:
         self.calls += 1
-        spec = self._arm(site, ctx, ("raise", "hang", "call"))
+        spec = self._arm(site, ctx, ("raise", "hang", "call",
+                                     "kill_process"))
         if spec is None:
             return
         if spec.kind == "raise":
@@ -134,6 +141,12 @@ class FaultInjector:
             raise InjectedFault(site, spec.match and repr(spec.match) or "")
         if spec.kind == "hang":
             self.sleep(spec.delay_s)
+        elif spec.kind == "kill_process":
+            # the real thing, not a simulation: the process is gone
+            # before the next Python bytecode runs
+            import os
+            import signal
+            os.kill(os.getpid(), signal.SIGKILL)
         elif spec.action is not None:  # kind == "call"
             spec.action(**ctx)
 

@@ -150,7 +150,18 @@ class SpGemmService:
     policy:        :class:`~repro.core.dispatch.RetryPolicy` governing
                    per-flush retries, backoff, the degradation ladder,
                    and the per-request deadline (``deadline_s``, taken
-                   against this service's clock)."""
+                   against this service's clock).
+    coordinator:   a :class:`~repro.runtime.coordinator.
+                   ProcessCoordinator` — when set, flushes are
+                   *dispatched* to its worker processes instead of run
+                   inline: ``_flush`` submits a packed task and returns
+                   immediately, ``pump``/``drain`` collect finished
+                   tasks, and concurrent buckets overlap across worker
+                   processes.  Worker death mid-flush is recovered by
+                   the coordinator (re-run on a survivor); when the
+                   whole pool is lost, the affected requests fall back
+                   to this process's own in-process ladder — every
+                   submitted id still resolves."""
 
     def __init__(self, *, max_batch: int = 8, flush_timeout: float = 0.02,
                  engine: str = "auto",
@@ -158,7 +169,8 @@ class SpGemmService:
                  cache: Optional[dp.AutotuneCache] = None,
                  rules=dp.DEFAULT_HEURISTICS,
                  clock: Callable[[], float] = time.monotonic,
-                 policy: Optional[dp.RetryPolicy] = None):
+                 policy: Optional[dp.RetryPolicy] = None,
+                 coordinator=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -169,11 +181,14 @@ class SpGemmService:
         self.rules = rules
         self.clock = clock
         self.policy = policy if policy is not None else dp.RetryPolicy()
+        self.coordinator = coordinator
         self._queues: dict[tuple, list[SpGemmRequest]] = {}
         self._opened: dict[tuple, float] = {}
         self._bucket_caps: dict[tuple, int] = {}
         self._next_id = 0
         self._by_id: dict[int, SpGemmRequest] = {}
+        # task_id -> (bucket key, requests, reason, t_flush, t0_wall)
+        self._inflight: dict[int, tuple] = {}
         self.completed: list[SpGemmRequest] = []
         self.dead_letters: list[SpGemmRequest] = []
         self.flush_log: list[FlushRecord] = []
@@ -210,26 +225,41 @@ class SpGemmService:
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return (sum(len(q) for q in self._queues.values())
+                + sum(len(reqs) for _, reqs, *_ in self._inflight.values()))
 
     # -- flushing --------------------------------------------------------
 
     def pump(self, now: Optional[float] = None) -> int:
         """Flush every bucket whose oldest request aged past the
-        timeout; returns the number of requests completed."""
+        timeout; returns the number of requests completed.
+
+        In multi-process mode this is also the collection point: tasks
+        the worker pool finished since the last pump complete here."""
         now = self.clock() if now is None else now
-        done = 0
+        done = self._collect(block=False)
         for key in [k for k, t in self._opened.items()
                     if now - t >= self.flush_timeout]:
             done += self._flush(key, now, reason="timeout")
         return done
 
-    def drain(self, now: Optional[float] = None) -> int:
-        """Flush everything regardless of age (shutdown / end of bench)."""
+    def drain(self, now: Optional[float] = None,
+              timeout: float = 300.0) -> int:
+        """Flush everything regardless of age (shutdown / end of bench).
+
+        In multi-process mode, blocks until every dispatched task came
+        back (or ``timeout`` expired — the stragglers then run through
+        the local ladder, so drain still resolves every request)."""
         now = self.clock() if now is None else now
         done = 0
         for key in list(self._queues):
             done += self._flush(key, now, reason="drain")
+        if self._inflight:
+            done += self._collect(block=True, timeout=timeout)
+            for tid in list(self._inflight):
+                # pool never answered: serve the stragglers ourselves
+                done += self._finish_remote(
+                    tid, {"pool_lost": True, "why": "drain timeout"})
         return done
 
     def _stick_bucket_cap(self, key: tuple, sp):
@@ -298,6 +328,99 @@ class SpGemmService:
         return planner(A, B)
 
     def _flush(self, key: tuple, now: float, reason: str) -> int:
+        """Flush one bucket: dispatched to the worker pool when a
+        coordinator is attached, run inline otherwise."""
+        if self.coordinator is not None:
+            return self._flush_remote(key, now, reason)
+        return self._flush_local(key, now, reason)
+
+    # -- multi-process flushing -----------------------------------------
+
+    def _flush_remote(self, key: tuple, now: float, reason: str) -> int:
+        """Pack the bucket into a task and hand it to the worker pool.
+
+        Returns 0 — completion is asynchronous; ``pump``/``drain``
+        collect.  A pool that is already fully lost degrades to the
+        local ladder right here."""
+        from repro.runtime import coordinator as coord
+        reqs = self._queues.pop(key, [])
+        self._opened.pop(key, None)
+        if not reqs:
+            return 0
+        payload = coord.make_flush_payload(
+            reqs, bucket=key, engine=self.engine, max_batch=self.max_batch,
+            policy=self.policy)
+        try:
+            tid = self.coordinator.submit(payload)
+        except coord.PoolLost:
+            self._queues[key] = reqs
+            return self._flush_local(key, now, reason)
+        self._inflight[tid] = (key, reqs, reason, now, time.perf_counter())
+        return 0
+
+    def _collect(self, block: bool, timeout: float = 300.0) -> int:
+        """Absorb finished pool tasks into request completions."""
+        if self.coordinator is None or not self._inflight:
+            return 0
+        done = 0
+        deadline = time.monotonic() + timeout
+        while self._inflight:
+            results = self.coordinator.poll(timeout=0.2 if block else 0.0)
+            for tid, res in results:
+                done += self._finish_remote(tid, res)
+            if not block:
+                break
+            if not results and time.monotonic() >= deadline:
+                break
+        return done
+
+    def _finish_remote(self, tid: int, res: dict) -> int:
+        """Land one pool task's outcome on its requests.
+
+        Success lands per-request results/dead-letters plus the worker's
+        flush provenance; ``pool_lost``/``error`` re-queues the bucket
+        through the *local* supervised flush — the in-process ladder is
+        the fallback of last resort, so every request still resolves."""
+        from repro.runtime import coordinator as coord
+        inflight = self._inflight.pop(tid, None)
+        if inflight is None:
+            return 0
+        key, reqs, reason, t_flush, t0 = inflight
+        if "outcomes" not in res:
+            # the pool could not run it (lost / infrastructural error):
+            # degrade to the in-process ladder
+            self._queues.setdefault(key, []).extend(reqs)
+            return self._flush_local(key, t_flush, reason)
+        t_done = self.clock()
+        done_n = 0
+        for r, o in zip(reqs, res["outcomes"]):
+            if o["ok"]:
+                r.result = coord.unpack_csr(o["result"])
+                r.t_done = t_done
+                r.engine = o.get("engine")
+                r.tier = o.get("tier")
+                self.completed.append(r)
+                done_n += 1
+            else:
+                self._dead_letter(r, o.get("stage", "flush"),
+                                  o.get("kind", "Error"),
+                                  o.get("message", ""),
+                                  o.get("attempts", 1))
+        f = res.get("flush") or {}
+        self.flush_log.append(FlushRecord(
+            bucket=key, n_requests=len(reqs),
+            engine=f.get("engine", "?"), source=f.get("source", "?"),
+            reason=reason, t=t_flush,
+            wall_s=time.perf_counter() - t0,
+            tier=f.get("tier", "planned"),
+            attempts=f.get("attempts", 1),
+            n_failed=len(reqs) - done_n,
+            errors=tuple(f.get("errors", ()))))
+        return done_n
+
+    # -- in-process flushing --------------------------------------------
+
+    def _flush_local(self, key: tuple, now: float, reason: str) -> int:
         """Supervised flush: planned tier with bounded retries, then the
         degradation ladder, then per-request isolation.  Surviving
         requests always complete; failures dead-letter individually."""

@@ -1,0 +1,136 @@
+"""Elastic re-meshing (`runtime/elastic.py`): the lane-partition policy
+the process coordinator uses for shrink/grow, the (data, model) remesh
+fallback, and the save-on-one-mesh / restore-on-another round trip.
+
+The pure partition policy runs everywhere; the device-count shrink/grow
+and resharded-restore cases need a real multi-device mesh, so they run
+in an 8-host-device subprocess (slow lane, like test_distributed)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime import elastic
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# remesh_lanes: the coordinator's shrink/grow partition policy
+# ---------------------------------------------------------------------------
+
+def test_remesh_lanes_even_split():
+    assert elastic.remesh_lanes(8, 2) == [range(0, 4), range(4, 8)]
+    assert elastic.remesh_lanes(8, 4) == [range(0, 2), range(2, 4),
+                                          range(4, 6), range(6, 8)]
+
+
+def test_remesh_lanes_remainder_goes_to_early_workers():
+    parts = elastic.remesh_lanes(8, 3)
+    assert [len(p) for p in parts] == [3, 3, 2]
+    # contiguous, disjoint, covering
+    flat = [i for p in parts for i in p]
+    assert flat == list(range(8))
+
+
+def test_remesh_lanes_shrink_then_grow_is_deterministic():
+    # a 4-worker pool losing one: the survivors re-cover the lane space
+    assert [len(p) for p in elastic.remesh_lanes(8, 4)] == [2, 2, 2, 2]
+    assert [len(p) for p in elastic.remesh_lanes(8, 3)] == [3, 3, 2]
+    # the worker returns: the partition grows back to the original
+    assert elastic.remesh_lanes(8, 4) == elastic.remesh_lanes(8, 4)
+
+
+def test_remesh_lanes_more_workers_than_lanes_share_lane_zero():
+    parts = elastic.remesh_lanes(2, 5)
+    assert [len(p) for p in parts] == [1] * 5
+    assert parts[0] == range(0, 1) and parts[1] == range(1, 2)
+    # surplus workers fall back to lane 0 — never zero lanes
+    assert parts[2] == parts[3] == parts[4] == range(0, 1)
+
+
+def test_remesh_lanes_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        elastic.remesh_lanes(8, 0)
+    with pytest.raises(ValueError):
+        elastic.remesh_lanes(0, 2)
+
+
+def test_remesh_single_device_fallback():
+    """remesh on whatever devices the local run has: the fallback mesh
+    keeps the (data, model) axes and covers the requested devices."""
+    import jax
+    n = len(jax.devices())
+    mesh = elastic.remesh(n)
+    assert set(mesh.axis_names) >= {"data", "model"}
+    assert len(mesh.devices.reshape(-1)) >= 1
+
+
+# ---------------------------------------------------------------------------
+# shrink/grow on a real 8-device mesh (subprocess, slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_remesh_shrink_grow_8_devices():
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {repr(SRC)})
+import jax
+from repro.runtime import elastic
+
+m8 = elastic.remesh(8)
+n8 = len(m8.devices.reshape(-1))
+m4 = elastic.remesh(4)   # shrink: half the pool left
+n4 = len(m4.devices.reshape(-1))
+m8b = elastic.remesh(8)  # grow back
+assert n4 < n8, (n4, n8)
+assert n4 == 4 and n8 == 8, (n4, n8)
+assert m8b.axis_names == m8.axis_names
+assert len(m8b.devices.reshape(-1)) == n8
+print("REMESH_OK", n8, n4)
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300)
+    assert "REMESH_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_reshard_restore_round_trip_resized_mesh(tmp_path):
+    """Save params once (mesh-agnostic), restore onto a 4-device mesh,
+    then onto the full 8-device mesh: both restores are value-identical
+    and actually spread over the requested device sets."""
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {repr(SRC)})
+import functools
+import jax, numpy as np
+from repro.checkpoint import ckpt
+from repro.configs import base as cb
+from repro.models import model as M
+from repro.runtime import elastic
+
+cfg = cb.get_smoke_config("tinyllama_1_1b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+ckpt.save({repr(str(tmp_path))}, 1, params)
+shapes = jax.eval_shape(functools.partial(M.init_params, cfg),
+                        jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+want = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+
+for n in (4, 8):  # shrink first, then grow back
+    mesh = elastic.remesh(n)
+    got = elastic.reshard_restore({repr(str(tmp_path))}, shapes, mesh,
+                                  fsdp=False)
+    n_dev = len(got["embed"]["w"].sharding.device_set)
+    assert n_dev == n, (n, n_dev)
+    for a, b in zip(want, jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+print("RESHARD_ROUND_TRIP_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600)
+    assert "RESHARD_ROUND_TRIP_OK" in r.stdout, r.stdout + r.stderr

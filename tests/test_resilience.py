@@ -9,6 +9,7 @@ flaky randomness.  The suite runs on any device count — the CI
 ``chaos-fast`` lane re-runs it with 8 forced host devices so the
 sharded-worker paths are exercised multi-device."""
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -262,6 +263,97 @@ def test_quarantine_merges_across_processes(cache, tmp_path):
     merged = dp.AutotuneCache(cache.path)
     assert merged.is_quarantined(key, "esc")
     assert merged.is_quarantined(key, "spz-fused", "xla")
+
+
+def test_refresh_pulls_entries_flushed_by_another_process(cache):
+    """The "pull" half of the cross-process cache protocol: another
+    process's flush becomes visible via refresh(), with a version bump
+    exactly when something changed."""
+    other = dp.AutotuneCache(cache.path)
+    cache.put("mine", "esc", "heuristic")      # load + flush our view
+    v0 = cache.version
+    other.put("theirs", "spz-fused", "autotune")
+    other.quarantine("poisoned", "esc", None)
+    assert cache.get("theirs") is None         # stale view so far
+    assert cache.refresh() is True
+    assert cache.get("theirs")["engine"] == "spz-fused"
+    assert cache.is_quarantined("poisoned", "esc")
+    assert cache.version > v0                  # memoized plans invalidated
+    v1 = cache.version
+    assert cache.refresh() is False            # idempotent: nothing new
+    assert cache.version == v1
+
+
+def test_plan_miss_pulls_quarantine_pushed_by_sibling(cache, tmp_path):
+    """Pull-on-plan-miss: a combo poisoned by a sibling process is never
+    selected by this process, even on its very first plan of the
+    bucket."""
+    m = _mat(seed=21)
+    # what would this process pick, unpoisoned?
+    probe = dp.plan(m, m, engine="auto",
+                    cache=dp.AutotuneCache(str(tmp_path / "probe.json")))
+    # force our cache to load its (still-empty) view of the file FIRST
+    assert len(cache) == 0
+    # ...then a sibling process poisons that combo (push-on-quarantine)
+    sibling = dp.AutotuneCache(cache.path)
+    sibling.quarantine(probe.cache_key, probe.engine, probe.backend,
+                       reason="crashed in sibling")
+    p = dp.plan(m, m, engine="auto", cache=cache)
+    assert (p.engine, p.backend) != (probe.engine, probe.backend)
+    assert p.rule == "quarantine-fallback"
+
+
+def test_flush_lock_timeout_skips_never_stalls(cache, tmp_path):
+    """Satellite hardening: a hung — not dead — holder of the autotune
+    file lock costs a *skipped flush*, never a stalled serving process.
+    The holder hangs via an injected ``hang``-kind fault fired while it
+    holds the flock; the contender's put() must return within its lock
+    timeout with the write skipped, then land the entry once the lock
+    frees."""
+    import threading
+    try:
+        import fcntl  # noqa: F401  (lock contention needs flock)
+    except ImportError:
+        pytest.skip("no fcntl on this platform")
+
+    holder = dp.AutotuneCache(cache.path)
+    holding = threading.Event()
+    release = threading.Event()
+
+    def hold_and_hang(_delay):
+        holding.set()
+        release.wait(timeout=30.0)
+
+    def run_holder():
+        # the hang fires at the autotune.flush site, *after* the flock
+        # is taken (see AutotuneCache._flush ordering)
+        with fi.injected(fi.FaultSpec(site="autotune.flush", kind="hang",
+                                      delay_s=1.0, max_fires=1),
+                         sleep=hold_and_hang):
+            holder.put("held", "esc", "heuristic")
+
+    t = threading.Thread(target=run_holder, daemon=True)
+    t.start()
+    assert holding.wait(timeout=10.0)
+
+    contender = dp.AutotuneCache(cache.path, lock_timeout_s=0.2)
+    t0 = time.monotonic()
+    contender.put("contended", "spz-fused", "heuristic")
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0, f"put stalled {elapsed:.1f}s behind a hung holder"
+    # the flush was skipped, not silently dropped: the entry stayed in
+    # memory and the file does not have it yet
+    assert contender.get("contended") is not None
+    assert dp.AutotuneCache(cache.path).get("contended") is None
+
+    release.set()
+    t.join(timeout=30.0)
+    # lock free again: the next flush lands both writers' entries
+    contender.put("contended2", "esc", "heuristic")
+    merged = dp.AutotuneCache(cache.path)
+    assert merged.get("contended") is not None
+    assert merged.get("contended2") is not None
+    assert merged.get("held") is not None
 
 
 def test_autotune_sweep_survives_crashing_engine(cache):
