@@ -46,12 +46,14 @@ def load_sections(path: str, sections: list[str] | None) -> dict[str, dict]:
     return out
 
 
-def load_availability(path: str,
-                      sections: list[str] | None) -> dict[tuple, float]:
-    """Map (section, row name) -> availability for rows whose ``derived``
-    field carries an ``availability=<frac>`` entry (the serve chaos
-    rows).  These compare on the fraction, not the timing."""
+def load_derived(path: str, sections: list[str] | None,
+                 key: str) -> dict[tuple, float]:
+    """Map (section, row name) -> value for rows whose ``derived`` field
+    carries a ``<key>=<number>`` entry (e.g. ``availability=0.99`` on
+    the serve chaos rows, ``warm_hit_rate=1.0`` on the warm rows).
+    These compare on the fraction, not the timing."""
     out: dict[tuple, float] = {}
+    prefix = key + "="
     for fn in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
         try:
             with open(fn) as f:
@@ -64,13 +66,18 @@ def load_availability(path: str,
             continue
         for r in data.get("rows", []):
             for part in str(r.get("derived", "")).split("|"):
-                if part.startswith("availability="):
+                if part.startswith(prefix):
                     try:
                         out[(section, r["name"])] = float(
                             part.split("=", 1)[1])
                     except ValueError:
                         pass
     return out
+
+
+def load_availability(path: str,
+                      sections: list[str] | None) -> dict[tuple, float]:
+    return load_derived(path, sections, "availability")
 
 
 def compare_availability(base: dict[tuple, float], cur: dict[tuple, float],
@@ -130,6 +137,18 @@ def main() -> int:
                     help="flag serve chaos rows whose availability "
                          "fraction falls below this floor (default 0.99; "
                          "always warn-only)")
+    ap.add_argument("--warm-hit-floor", type=float, default=0.90,
+                    help="flag serve rows whose warm_hit_rate falls "
+                         "below this floor (default 0.90; always "
+                         "warn-only) — the compile-ahead gate: the first "
+                         "post-warm flush wave should land on "
+                         "pre-compiled plans")
+    ap.add_argument("--p50-floor-us", type=float, default=170000.0,
+                    help="flag the serve.async.p50 row when its "
+                         "us_per_call exceeds this ceiling (default "
+                         "170000us ~= 10x better than the 1.67s "
+                         "synchronous steady-state p50; always "
+                         "warn-only)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on regressions (default: warn only)")
     args = ap.parse_args()
@@ -160,6 +179,21 @@ def main() -> int:
     for section, name, b, c in drops:
         print(f"AVAILABILITY DROP {section}: {name} {b:.4f} -> {c:.4f} "
               f"(floor {args.availability_floor:.2f}, warn-only)")
+    # warm-hit + async-p50 gates compare the *current* run against
+    # absolute floors (warn-only): compile-ahead warming should keep the
+    # first post-warm flush wave on pre-compiled plans, and the async
+    # steady-state p50 an order of magnitude under the synchronous row
+    for (section, name), v in sorted(
+            load_derived(args.current, args.sections or None,
+                         "warm_hit_rate").items()):
+        if v < args.warm_hit_floor:
+            print(f"WARM-HIT DROP {section}: {name} {v:.4f} < floor "
+                  f"{args.warm_hit_floor:.2f} (warn-only)")
+    for section in sorted(cur):
+        p50 = cur[section].get("serve.async.p50")
+        if p50 is not None and p50 > args.p50_floor_us:
+            print(f"P50 CEILING {section}: serve.async.p50 {p50:.1f}us > "
+                  f"{args.p50_floor_us:.0f}us (warn-only)")
     if not regressions:
         print("no regressions")
         return 0

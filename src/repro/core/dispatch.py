@@ -40,6 +40,7 @@ import json
 import math
 import os
 import tempfile
+import threading
 import time
 from typing import Any, Callable, Optional, Sequence
 
@@ -161,12 +162,15 @@ class _OperandMemo:
     (the feature group, or the full plan request); entries pin the index
     buffers so an id cannot be recycled while its entry lives, and an
     ``is`` check on hit guards against lookups racing a rebuild.  One
-    instance memoizes feature dicts, another whole ExecutionPlans."""
+    instance memoizes feature dicts, another whole ExecutionPlans.
+    Access is lock-guarded: async serving plans concurrent flushes from
+    executor threads against these module-level memos."""
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self._mu = threading.Lock()
         self._entries: collections.OrderedDict = collections.OrderedDict()
 
     @staticmethod
@@ -177,21 +181,26 @@ class _OperandMemo:
 
     def get(self, A: CSR, B: CSR, extra) -> Optional[Any]:
         key = self._key(A, B, extra)
-        hit = self._entries.get(key)
-        if hit is not None and hit[1] is A.indices and hit[2] is B.indices:
-            self._entries.move_to_end(key)
-            self.hits += 1
-            return hit[0]
-        self.misses += 1
-        return None
+        with self._mu:
+            hit = self._entries.get(key)
+            if hit is not None and hit[1] is A.indices \
+                    and hit[2] is B.indices:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return hit[0]
+            self.misses += 1
+            return None
 
     def put(self, A: CSR, B: CSR, extra, value) -> None:
-        self._entries[self._key(A, B, extra)] = (value, A.indices, B.indices)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._mu:
+            self._entries[self._key(A, B, extra)] = (value, A.indices,
+                                                     B.indices)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._mu:
+            self._entries.clear()
         self.hits = self.misses = 0
 
 
@@ -328,6 +337,9 @@ class AutotuneCache:
         # (autotune upgrades, clears, pulled quarantines) — keyed into
         # the plan memo
         self.version = 0
+        # serializes in-process access (async flush threads share one
+        # cache object); the fcntl file lock covers cross-process
+        self._mu = threading.RLock()
         if lock_timeout_s is None:
             lock_timeout_s = float(os.environ.get(
                 "REPRO_AUTOTUNE_LOCK_TIMEOUT_S", "0.5"))
@@ -360,17 +372,19 @@ class AutotuneCache:
         return self._entries
 
     def get(self, key: str) -> Optional[dict]:
-        return self._load().get(key)
+        with self._mu:
+            return self._load().get(key)
 
     def put(self, key: str, engine: str, source: str,
             backend: Optional[str] = None) -> None:
-        entry = {"engine": engine, "source": source}
-        if backend is not None:
-            entry["backend"] = backend
-        self._load()[key] = entry
-        if source == "autotune":
-            self.version += 1
-        self._flush()
+        with self._mu:
+            entry = {"engine": engine, "source": source}
+            if backend is not None:
+                entry["backend"] = backend
+            self._load()[key] = entry
+            if source == "autotune":
+                self.version += 1
+            self._flush()
 
     # -- quarantine: poisoned (engine, backend) combos per shape bucket --
 
@@ -387,37 +401,40 @@ class AutotuneCache:
         be re-selected on the next plan: quarantined combos are skipped
         by cache hits, heuristic selection, and autotune sweeps.  With
         ``backend=None`` the engine is poisoned for every backend."""
-        entries = self._load()
-        qk = _QUAR_PREFIX + key
-        q = entries.setdefault(qk, {"combos": []})
-        combo = self._combo(engine, backend)
-        if combo not in q["combos"]:
-            q["combos"].append(combo)
-        if reason:
-            q.setdefault("reasons", {})[combo] = reason
-        # a selection entry routing to the poisoned combo is dropped so
-        # the next plan re-selects among healthy candidates
-        sel = entries.get(key)
-        if sel is not None and sel.get("engine") == engine and \
-                backend in (None, sel.get("backend")):
-            entries.pop(key)
-        self.version += 1  # invalidate memoized plans
-        self._flush()
+        with self._mu:
+            entries = self._load()
+            qk = _QUAR_PREFIX + key
+            q = entries.setdefault(qk, {"combos": []})
+            combo = self._combo(engine, backend)
+            if combo not in q["combos"]:
+                q["combos"].append(combo)
+            if reason:
+                q.setdefault("reasons", {})[combo] = reason
+            # a selection entry routing to the poisoned combo is dropped
+            # so the next plan re-selects among healthy candidates
+            sel = entries.get(key)
+            if sel is not None and sel.get("engine") == engine and \
+                    backend in (None, sel.get("backend")):
+                entries.pop(key)
+            self.version += 1  # invalidate memoized plans
+            self._flush()
 
     def is_quarantined(self, key: str, engine: str,
                        backend: Optional[str] = None) -> bool:
-        q = self._load().get(_QUAR_PREFIX + key)
-        if not q:
-            return False
-        combos = set(q.get("combos", ()))
-        return (self._combo(engine, backend) in combos
-                or self._combo(engine, None) in combos)
+        with self._mu:
+            q = self._load().get(_QUAR_PREFIX + key)
+            if not q:
+                return False
+            combos = set(q.get("combos", ()))
+            return (self._combo(engine, backend) in combos
+                    or self._combo(engine, None) in combos)
 
     def quarantined(self, key: str) -> list[tuple[str, Optional[str]]]:
         """The (engine, backend) combos quarantined for a bucket."""
-        q = self._load().get(_QUAR_PREFIX + key, {})
-        return [(c.split("|", 1)[0], c.split("|", 1)[1] or None)
-                for c in q.get("combos", ())]
+        with self._mu:
+            q = self._load().get(_QUAR_PREFIX + key, {})
+            return [(c.split("|", 1)[0], c.split("|", 1)[1] or None)
+                    for c in q.get("combos", ())]
 
     def _lock_file(self):
         """Open + exclusively lock ``<path>.lock``.
@@ -506,18 +523,23 @@ class AutotuneCache:
         memory without writing anything back.  Bumps :attr:`version`
         when the merge changed anything, so memoized plans built on the
         stale view are invalidated.  Returns whether anything changed."""
-        if self._entries is None:
-            self._load()
-            return True
-        disk = self._read_disk()
-        if not disk:
-            return False
-        changed = self._merge_from(disk)
-        if changed:
-            self.version += 1
-        return changed
+        with self._mu:
+            if self._entries is None:
+                self._load()
+                return True
+            disk = self._read_disk()
+            if not disk:
+                return False
+            changed = self._merge_from(disk)
+            if changed:
+                self.version += 1
+            return changed
 
     def _flush(self) -> None:
+        with self._mu:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
         tmp = None
         lock = None
         try:
@@ -556,15 +578,17 @@ class AutotuneCache:
 
     def clear(self) -> None:
         """Drop all entries, in memory and on disk (no merge-back)."""
-        self._entries = {}
-        self.version += 1
-        try:
-            os.unlink(self.path)
-        except OSError:
-            pass
+        with self._mu:
+            self._entries = {}
+            self.version += 1
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
 
     def __len__(self) -> int:
-        return len(self._load())
+        with self._mu:
+            return len(self._load())
 
 
 _default_cache: Optional[AutotuneCache] = None
@@ -1377,3 +1401,125 @@ def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
     those for selection and execution semantics."""
     p = plan_batched(A, B, engine, cache=cache, rules=rules, **kw)
     return execute_batched(p, A, B)
+
+
+# ---------------------------------------------------------------------------
+# compile-ahead plan warming (the serving layer's warm pool)
+# ---------------------------------------------------------------------------
+
+_warm_mu = threading.Lock()
+_warmed_jit_keys: set = set()
+_warm_counters = {"warmed": 0, "hits": 0, "misses": 0}
+
+
+def note_warmed(jit_key: tuple) -> None:
+    """Record a jit identity as compile-warmed in *this* process."""
+    with _warm_mu:
+        _warmed_jit_keys.add(jit_key)
+        _warm_counters["warmed"] += 1
+
+
+def jit_warmed(jit_key: tuple, count: bool = True) -> bool:
+    """Whether ``jit_key`` was compiled ahead of traffic here.
+
+    With ``count=True`` (the serving layer's per-flush check) the
+    outcome lands on the warm hit/miss counters."""
+    with _warm_mu:
+        hit = jit_key in _warmed_jit_keys
+        if count:
+            _warm_counters["hits" if hit else "misses"] += 1
+        return hit
+
+
+def warm_stats() -> dict:
+    """{"warmed": plans compiled ahead, "hits"/"misses": flush checks}."""
+    with _warm_mu:
+        return dict(_warm_counters)
+
+
+def reset_warm_stats() -> None:
+    with _warm_mu:
+        _warmed_jit_keys.clear()
+        _warm_counters.update(warmed=0, hits=0, misses=0)
+
+
+def _synthetic_csr(shape: tuple, nnz_cap: int) -> CSR:
+    """Deterministic stand-in operand landing in pad bucket ``nnz_cap``.
+
+    nnz is pinned to ``nnz_cap - 1`` (clamped to the shape's capacity):
+    a pad bucket holds nnz in (cap/2, cap], and ``cache_key``'s
+    ``bit_length`` bucket puts cap-1 — but not cap itself — in the same
+    plan bucket as that dominant range.  Entries spread uniformly with
+    strictly increasing columns per row, so the operand is valid CSR
+    without any RNG (warming must be deterministic and cheap)."""
+    n_rows, n_cols = int(shape[0]), int(shape[1])
+    nnz = int(max(1, min(nnz_cap - 1, n_rows * n_cols)))
+    base, extra = divmod(nnz, n_rows)
+    counts = np.full(n_rows, base, np.int64)
+    counts[:extra] += 1
+    counts = np.minimum(counts, n_cols)
+    rows = np.repeat(np.arange(n_rows), counts)
+    cols = (np.concatenate([(np.arange(c) * n_cols) // c
+                            for c in counts if c > 0])
+            if counts.sum() else np.zeros(0, np.int64))
+    vals = np.ones(int(counts.sum()), np.float32)
+    return csr_from_coo(rows, cols, vals, (n_rows, n_cols))
+
+
+def synthetic_bucket_operands(bucket: tuple) -> tuple[CSR, CSR]:
+    """A deterministic (A, B) pair whose serving pad bucket is ``bucket``
+    (``(A.shape, B.shape, nnz_cap_a, nnz_cap_b)``)."""
+    a_shape, b_shape, cap_a, cap_b = bucket
+    return _synthetic_csr(a_shape, cap_a), _synthetic_csr(b_shape, cap_b)
+
+
+def warm_bucket(bucket: tuple, *, engine: str = "auto", max_batch: int = 8,
+                cache: Optional[AutotuneCache] = None, mesh=None,
+                rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                sample: Optional[tuple] = None,
+                sticky_cap: Optional[int] = None,
+                cap_headroom: int = 2) -> dict:
+    """Compile one serving pad bucket ahead of its first request.
+
+    Runs a flush-shaped pass — ``batch_csr`` at the bucket's pad
+    capacities, ``plan_sharded``, ``execute_sharded`` — over a sampled
+    real pair (``sample``) or a synthetic stand-in, so the plan lands in
+    the autotune cache *and* the compiled computation lands in this
+    process's jit cache before traffic hits the bucket.  The selection
+    entry propagates cross-process through the shared cache file; the
+    compilation is per-process, which is why coordinator workers run
+    their own ``warm`` tasks.
+
+    esc capacity handling: the resulting ``cap_products`` is raised by
+    ``cap_headroom`` (a pow2 factor; the sample may not be the bucket's
+    heaviest traffic) and by ``sticky_cap`` (the caller's running
+    per-bucket max).  The caller seeds its sticky cap from the returned
+    ``"cap"`` so real flushes pin to the warmed jit identity instead of
+    recompiling at the next capacity boundary.
+
+    Returns ``{"bucket", "engine", "backend", "source", "cap",
+    "wall_s"}``."""
+    from repro.distributed import spgemm_shard as shard
+    if cache is None:
+        cache = default_cache()
+    _, _, cap_a, cap_b = bucket
+    A, B = sample if sample is not None else synthetic_bucket_operands(bucket)
+    t0 = time.perf_counter()
+    fi.fire("dispatch.warm", bucket=tuple(bucket))
+    Ab = batch_csr([A], nnz_cap=cap_a, batch_cap=max_batch)
+    Bb = batch_csr([B], nnz_cap=cap_b, batch_cap=max_batch)
+    sp = shard.plan_sharded(Ab, Bb, engine, mesh=mesh, cache=cache,
+                            rules=rules)
+    cap = None
+    if sp.base.engine == "esc":
+        cap = int(sp.base.kwargs_dict.get("cap_products", 0))
+        cap = max(cap * max(int(cap_headroom), 1), int(sticky_cap or 0))
+        kwargs = _sorted_kwargs({**sp.base.kwargs_dict,
+                                 "cap_products": cap})
+        sp = dataclasses.replace(
+            sp, base=dataclasses.replace(sp.base, kwargs=kwargs))
+    shard.execute_sharded(sp, Ab, Bb)
+    note_warmed(sp.base.jit_key)
+    return {"bucket": tuple(bucket), "engine": sp.base.engine,
+            "backend": sp.base.backend, "source": sp.base.source,
+            "cap": cap, "wall_s": time.perf_counter() - t0}

@@ -26,6 +26,16 @@ recovery (the task re-runs on a survivor; availability stays 1.0):
       --workers 4
   PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
       --workers 2 --kill-worker-proc --inject-rate 0.1
+
+Async + compile-ahead mode keeps admission non-blocking (flushes run on
+an executor thread pool or on the worker pool) and pre-compiles the
+traffic mix's pad buckets before the first request, so the steady state
+never pays a first-touch XLA compile inline:
+
+  PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
+      --async-flushes 2 --warm
+  PYTHONPATH=src python -m repro.launch.serve_spgemm --requests 200 \\
+      --workers 4 --warm
 """
 from __future__ import annotations
 
@@ -107,6 +117,17 @@ def main() -> None:
     ap.add_argument("--kill-worker-proc", action="store_true",
                     help="SIGKILL worker process 0 once, mid-flush "
                          "(requires --workers >= 1)")
+    ap.add_argument("--async-flushes", type=int, default=0, metavar="N",
+                    help="run flushes on an executor pool of N threads: "
+                         "admission never blocks on execution and "
+                         "concurrent buckets overlap (0 = synchronous "
+                         "inline flushes; ignored under --workers, where "
+                         "the process pool is the async vehicle)")
+    ap.add_argument("--warm", action="store_true",
+                    help="compile-ahead: pre-compile the traffic mix's "
+                         "pad buckets (plus their pow2 neighbors) before "
+                         "the first request, and keep warming buckets "
+                         "predicted from the admission stream")
     args = ap.parse_args()
 
     cache = dp.AutotuneCache(args.cache or os.path.join(
@@ -134,10 +155,28 @@ def main() -> None:
             engine=args.engine,
             fault_specs=pool_specs or None, fault_seed=args.chaos_seed)
 
+    warmer = None
+    if args.warm:
+        from repro.serving.plan_warmer import PlanWarmer
+        # one representative pair per traffic class, at nominal density;
+        # neighbor warming covers the jittered pow2 boundaries
+        reps = [(random_sparse(n, n, d, seed=7 + i, pattern=p),) * 2
+                for i, (n, d, p) in enumerate(TRAFFIC_MIX)]
+        warmer = PlanWarmer(configured=reps)
+
     service = SpGemmService(max_batch=args.max_batch,
                             flush_timeout=args.timeout,
                             engine=args.engine, cache=cache,
-                            policy=policy, coordinator=coordinator)
+                            policy=policy, coordinator=coordinator,
+                            async_flushes=args.async_flushes
+                            if coordinator is None else 0,
+                            warmer=warmer)
+    if args.warm:
+        t_warm = time.perf_counter()
+        n_warmed = service.prewarm()
+        print(f"# prewarmed {n_warmed} pad buckets in "
+              f"{time.perf_counter() - t_warm:.2f}s "
+              f"({warmer.stats()['failed']} failed)")
 
     specs = []
     if args.workers == 0 and args.inject_rate > 0.0:
@@ -167,6 +206,7 @@ def main() -> None:
                 snap = (len(service.completed), len(service.flush_log))
         service.drain()
     wall = time.perf_counter() - t0
+    service.close()
     if coordinator is not None:
         events = [e["event"] for e in coordinator.events]
         print(f"# pool: {args.workers} workers, "
@@ -186,7 +226,9 @@ def main() -> None:
               f"req/s={s['req_per_s']:.1f} | "
               f"p50={s['p50_latency_s'] * 1e3:.2f}ms "
               f"p95={s['p95_latency_s'] * 1e3:.2f}ms | "
-              f"plan_hit_rate={s.get('plan_hit_rate', 0.0):.2f}")
+              f"plan_hit_rate={s.get('plan_hit_rate', 0.0):.2f}"
+              + (f" | warm_hit_rate={s.get('warm_hit_rate', 0.0):.2f}"
+                 if args.warm else ""))
     if args.inject_rate > 0.0 or args.kill_worker is not None \
             or args.kill_worker_proc:
         tiers: dict = {}

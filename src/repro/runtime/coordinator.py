@@ -12,10 +12,24 @@ shard workers — generalised to real processes that can be SIGKILLed:
 
   * **task dispatch** — the serving layer submits *flush tasks*
     (a pad bucket's worth of packed CSR pairs); the coordinator routes
-    each to the least-loaded live worker, which runs the task through a
-    local :class:`~repro.serving.spgemm_service.SpGemmService` — so
-    every worker process carries the full PR 6 ladder (retries,
-    degradation, per-request isolation, structured dead letters);
+    each by **bucket affinity** (rendezvous hashing over the live
+    workers), so repeat flushes of a pad bucket land on the worker that
+    already compiled it — per-process XLA jit caches make spreading a
+    bucket across workers a re-compile, not a speedup, which is exactly
+    how ``serve.multiproc.w4`` used to run slower than w2.  The
+    affinity worker being busy queues the task (another worker that has
+    *seen* the bucket may take it); only a real backlog
+    (``affinity_spill``) spills it to a cold idle worker.  The worker
+    runs each flush through a local :class:`~repro.serving.
+    spgemm_service.SpGemmService` — so every worker process carries the
+    full PR 6 ladder (retries, degradation, per-request isolation,
+    structured dead letters) — and keeps its sticky esc caps across
+    tasks, pinning repeat flushes to one jit identity;
+  * **compile-ahead warming** — ``{"kind": "warm"}`` tasks route
+    through the same affinity, so a bucket's plan is compiled (
+    :func:`repro.core.dispatch.warm_bucket`) in the very worker its
+    flushes will land on; warmed selections also propagate cross-
+    process through the shared autotune cache file;
   * **death detection** — a killed worker is noticed by pipe EOF (plus
     ``exitcode``); its in-flight tasks are re-queued onto survivors
     (preferring a *different* worker), so a SIGKILL mid-flush costs
@@ -52,6 +66,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import multiprocessing as mp
 import multiprocessing.connection as mpc
 import os
@@ -114,25 +129,32 @@ def make_flush_payload(reqs, *, bucket: tuple, engine: str, max_batch: int,
 # ---------------------------------------------------------------------------
 
 
-def _run_flush(payload: dict, *, cache, mesh) -> dict:
+def _run_flush(payload: dict, *, cache, mesh, caps: dict) -> dict:
     """Execute one flush task through a local SpGemmService.
 
     The local service is the whole PR 6 stack in miniature: planned
     sharded tier with retries, the degradation ladder, per-request
     isolation — its quarantines push to the shared cache file and its
-    plan misses pull from it.  Returns per-request outcomes (packed
-    results or structured errors, id order preserved) plus the flush's
-    provenance record."""
+    plan misses pull from it.  ``caps`` is the worker's *persistent*
+    sticky-cap map (shared across tasks and with warm tasks), so repeat
+    flushes of a bucket — and flushes after a compile-ahead warm — pin
+    to one jit identity instead of recompiling per task.  Returns
+    per-request outcomes (packed results or structured errors, id order
+    preserved) plus the flush's provenance record."""
     from repro.core import dispatch as dp
     from repro.serving.spgemm_service import SpGemmService
 
     pairs = payload["pairs"]
     pol = payload.get("policy")
     policy = dp.RetryPolicy(**pol) if pol else dp.RetryPolicy()
+    bucket = payload.get("bucket")
+    sticky = payload.get("sticky_cap")
+    if bucket is not None and sticky:
+        caps[bucket] = max(int(sticky), caps.get(bucket, 0))
     svc = SpGemmService(
         max_batch=max(int(payload.get("max_batch", len(pairs))), len(pairs)),
         flush_timeout=0.0, engine=payload.get("engine", "auto"),
-        mesh=mesh, cache=cache, policy=policy)
+        mesh=mesh, cache=cache, policy=policy, bucket_caps=caps)
     reqs = [svc.submit(unpack_csr(a), unpack_csr(b)) for a, b in pairs]
     svc.drain()
     outcomes = []
@@ -150,8 +172,31 @@ def _run_flush(payload: dict, *, cache, mesh) -> dict:
     if f is not None:
         flush = {"engine": f.engine, "source": f.source, "tier": f.tier,
                  "attempts": f.attempts, "errors": list(f.errors),
-                 "wall_s": f.wall_s}
+                 "wall_s": f.wall_s, "warm_hit": f.warm_hit}
     return {"outcomes": outcomes, "flush": flush}
+
+
+def _run_warm(payload: dict, *, cache, mesh, caps: dict) -> dict:
+    """Execute one compile-ahead warm task: compile a pad bucket's plan
+    in this worker before its first flush arrives.
+
+    Fires the ``service.warm`` fault site (chaos tests SIGKILL workers
+    mid-warm here) and seeds the worker's persistent sticky-cap map, so
+    the bucket's real flushes pin to the warmed jit identity."""
+    from repro.core import dispatch as dp
+
+    bucket = payload["bucket"]
+    fi.fire("service.warm", bucket=bucket)
+    pair = payload.get("pair")
+    sample = (unpack_csr(pair[0]), unpack_csr(pair[1])) if pair else None
+    res = dp.warm_bucket(bucket, engine=payload.get("engine", "auto"),
+                         max_batch=int(payload.get("max_batch", 8)),
+                         cache=cache, mesh=mesh, sample=sample,
+                         sticky_cap=payload.get("sticky_cap"))
+    cap = res.get("cap")
+    if cap:
+        caps[bucket] = max(int(cap), caps.get(bucket, 0))
+    return {"warm": res}
 
 
 def _worker_main(conn, worker_id: int, init: dict) -> None:
@@ -181,6 +226,9 @@ def _worker_main(conn, worker_id: int, init: dict) -> None:
     mesh = make_lane_mesh(n_lanes)
     cache = (dp.AutotuneCache(init["cache_path"])
              if init.get("cache_path") else dp.default_cache())
+    # sticky esc caps, persistent across this worker's tasks: the flush
+    # of a warmed/previously-seen bucket reuses its jit identity
+    caps: dict = {}
     conn.send(("ready", os.getpid(), n_dev))
     while True:
         try:
@@ -200,7 +248,10 @@ def _worker_main(conn, worker_id: int, init: dict) -> None:
         # ("task", task_id, payload)
         _, task_id, payload = msg
         try:
-            out = _run_flush(payload, cache=cache, mesh=mesh)
+            if payload.get("kind") == "warm":
+                out = _run_warm(payload, cache=cache, mesh=mesh, caps=caps)
+            else:
+                out = _run_flush(payload, cache=cache, mesh=mesh, caps=caps)
             conn.send(("result", task_id, out))
         except Exception as e:
             try:
@@ -224,6 +275,24 @@ class _Task:
     payload: dict
     tries: int = 0
 
+    @property
+    def bucket_id(self) -> Optional[str]:
+        b = self.payload.get("bucket")
+        return None if b is None else repr(b)
+
+
+def _hrw(bucket_id: str, worker_id: int) -> int:
+    """Rendezvous (highest-random-weight) score of a worker for a bucket.
+
+    blake2s, not ``hash()``: stable across processes and
+    PYTHONHASHSEED, so a bucket's affinity worker is reproducible and
+    survives coordinator restarts.  The max-scoring *live* worker owns
+    the bucket; when it dies, ownership falls to the runner-up without
+    reshuffling anyone else (the rendezvous property)."""
+    h = hashlib.blake2s(f"{bucket_id}|{worker_id}".encode(),
+                        digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
 
 class _Worker:
     """Parent-side handle: process, pipe, budget, in-flight bookkeeping."""
@@ -238,6 +307,9 @@ class _Worker:
         self.dispatched_at: dict[int, float] = {}
         self.ping_sent: Optional[float] = None
         self.n_devices = 0
+        # bucket ids this process has compiled (reset on respawn: a
+        # fresh process has cold jit caches)
+        self.seen: set[str] = set()
 
 
 class ProcessCoordinator:
@@ -259,6 +331,11 @@ class ProcessCoordinator:
     max_task_retries:    re-dispatch budget per task before it is
                          returned as ``pool_lost`` (guards against a
                          task that kills every worker it touches).
+    affinity_spill:      backlog depth at a bucket's affinity worker
+                         past which its task may spill to a cold idle
+                         worker (recompiling there beats waiting);
+                         below it, tasks queue for the worker that
+                         already owns the bucket's compiled plan.
     task_timeout_s:      age at which an in-flight task declares its
                          worker hung (None disables).
     heartbeat_timeout_s: unanswered-ping age at which an *idle* worker
@@ -276,6 +353,7 @@ class ProcessCoordinator:
                  fault_seed: int = 0,
                  max_worker_restarts: int = 3,
                  max_task_retries: int = 3,
+                 affinity_spill: int = 2,
                  task_timeout_s: Optional[float] = 120.0,
                  heartbeat_timeout_s: float = 10.0,
                  start_timeout_s: float = 120.0):
@@ -291,6 +369,7 @@ class ProcessCoordinator:
         self.fault_seed = fault_seed
         self.max_worker_restarts = max_worker_restarts
         self.max_task_retries = max_task_retries
+        self.affinity_spill = max(int(affinity_spill), 1)
         self.task_timeout_s = task_timeout_s
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.start_timeout_s = start_timeout_s
@@ -343,6 +422,7 @@ class ProcessCoordinator:
         child_conn.close()  # our copy — EOF must propagate on child death
         w.proc, w.conn = proc, parent_conn
         w.ping_sent = None
+        w.seen = set()
         if not parent_conn.poll(self.start_timeout_s):
             self._kill(w)
             self.events.append({"event": "start_timeout", "worker": w.id})
@@ -424,24 +504,64 @@ class ProcessCoordinator:
 
     def _dispatch(self, t: _Task, avoid: Optional[int] = None,
                   prefer: Optional[int] = None) -> bool:
-        """Send a task to the least-loaded live worker; False if none."""
+        """Route one task to a worker; False keeps it queued.
+
+        Bucketed tasks (flushes and warms) go to their **affinity
+        worker** (rendezvous hash over the live set) — the process that
+        has, or will, compile that bucket.  When the affinity worker is
+        busy, another *idle* worker that already compiled the bucket may
+        take it; a cold idle worker only gets it once the affinity
+        worker's backlog reaches ``affinity_spill`` (a recompile then
+        beats waiting).  Otherwise the task stays queued — on a pool
+        whose workers share cores, spraying one bucket across processes
+        multiplies compiles without adding throughput (the old w4 <
+        w2 inversion).  Bucketless tasks fall back to least-loaded."""
         alive = [w for w in self._alive() if w.id != avoid] or self._alive()
         if not alive:
             return False
-        preferred = [w for w in alive if w.id == prefer]
-        w = preferred[0] if preferred \
-            else min(alive, key=lambda w: len(w.in_flight))
+        w = None
+        preferred = [x for x in alive if x.id == prefer]
+        bid = t.bucket_id
+        if preferred:
+            w = preferred[0]
+        elif bid is not None:
+            aff = max(alive, key=lambda x: _hrw(bid, x.id))
+            if not aff.in_flight:
+                w = aff
+            else:
+                warm_idle = [x for x in alive
+                             if bid in x.seen and not x.in_flight]
+                idle = [x for x in alive if not x.in_flight]
+                if warm_idle:
+                    w = max(warm_idle, key=lambda x: _hrw(bid, x.id))
+                elif idle and len(aff.in_flight) >= self.affinity_spill:
+                    w = max(idle, key=lambda x: _hrw(bid, x.id))
+                else:
+                    return False  # hold for the worker that owns it
+        else:
+            w = min(alive, key=lambda x: len(x.in_flight))
         try:
             w.conn.send(("task", t.id, t.payload))
         except (OSError, ValueError):
             return False  # worker died under us; poll will reap it
         w.in_flight[t.id] = t
         w.dispatched_at[t.id] = time.monotonic()
+        if bid is not None:
+            w.seen.add(bid)
         return True
 
     def _drain_queue(self) -> None:
-        while self._queue and self._dispatch(self._queue[0]):
-            self._queue.popleft()
+        # scan the whole queue, not just the head: affinity can block
+        # the head task (its owner is busy) while a later task's owner
+        # sits idle
+        if not self._queue:
+            return
+        held = []
+        while self._queue:
+            t = self._queue.popleft()
+            if not self._dispatch(t):
+                held.append(t)
+        self._queue.extend(held)
 
     def submit(self, payload: dict,
                prefer: Optional[int] = None) -> int:

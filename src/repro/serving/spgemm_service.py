@@ -1,4 +1,4 @@
-"""Continuous SpGEMM serving: request queue -> bucketed lanes -> sharded plan.
+"""Continuous SpGEMM serving: async admission -> bucketed lanes -> plan.
 
 The dispatch layer's caches only pay off under a *stream* of requests —
 the ROADMAP's "production traffic" direction.  This service closes that
@@ -11,6 +11,27 @@ request ages past ``flush_timeout``.  Execution goes through the
 work-balanced sharded plan path (``distributed/spgemm_shard.py``), and
 every flush records its plan provenance — after warmup, selections come
 from the autotune cache and the plan hit rate approaches 1.
+
+**Async pipeline** (PR 9): admission is cheap and non-blocking — with
+``async_flushes > 0`` a full or timed-out bucket is handed to a flush
+executor thread (or, with a ``coordinator``, to a worker process) and
+``submit`` returns immediately; concurrent buckets flush in parallel
+and ``pump``/``drain`` land finished outcomes back onto requests.  The
+supervised ladder itself (``_run_ladder``) touches no shared service
+state, so flushes of different buckets cannot interleave each other's
+bookkeeping; all accounting happens at collection time on the admission
+side (``_land``).  ``submit``/``pump``/``drain`` are thread-safe, so
+multiple client threads can drive one service.
+
+**Compile-ahead warming**: a :class:`~repro.serving.plan_warmer.
+PlanWarmer` predicts upcoming pad buckets (configured traffic classes +
+admission-stream frequency + pow2 neighbors) and the service compiles
+them ahead of traffic — through ``{"kind": "warm"}`` coordinator tasks
+(landing on the same affinity worker that will flush the bucket) or on
+the local flush executor — via :func:`repro.core.dispatch.warm_bucket`.
+Each flush records whether it landed on a pre-compiled computation
+(``FlushRecord.warm_hit``); warmed esc capacities seed the bucket's
+sticky cap so real flushes pin to the warmed jit identity.
 
 **Failure model** (the resilience layer of PR 6): operands are
 structurally validated at the ``submit`` boundary
@@ -37,7 +58,9 @@ benchmark section use it against the wall clock.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent import futures as cf
 from typing import Callable, Optional
 
 import numpy as np
@@ -127,6 +150,7 @@ class FlushRecord:
     attempts: int = 1       # execution attempts across tiers
     n_failed: int = 0       # requests dead-lettered by this flush
     errors: tuple = ()      # per-attempt error trail (str)
+    warm_hit: bool = False  # planned tier landed on a pre-compiled jit
 
     @property
     def plan_hit(self) -> bool:
@@ -135,6 +159,24 @@ class FlushRecord:
     @property
     def degraded(self) -> bool:
         return self.tier != "planned"
+
+
+@dataclasses.dataclass
+class _FlushOutcome:
+    """What one supervised ladder run produced, detached from service
+    state: per-request results/dead-letters keyed by position in the
+    flushed batch, plus the flush's provenance.  Built by
+    ``_run_ladder`` (possibly on an executor thread), applied by
+    ``_land`` (always on the admission side, under the service lock)."""
+
+    results: dict      # index -> (CSR result, engine, tier)
+    dead: dict         # index -> (stage, kind, message, attempts)
+    engine: str
+    source: str
+    tier: str
+    attempts: int
+    errors: tuple
+    warm_hit: bool = False
 
 
 class SpGemmService:
@@ -151,6 +193,16 @@ class SpGemmService:
                    per-flush retries, backoff, the degradation ladder,
                    and the per-request deadline (``deadline_s``, taken
                    against this service's clock).
+    async_flushes: > 0 runs flushes on a thread-pool executor of that
+                   size instead of inline: ``submit`` never blocks on a
+                   flush, concurrent buckets overlap, and
+                   ``pump``/``drain`` land finished outcomes.  0 (the
+                   default) keeps the synchronous inline flush.
+    warmer:        a :class:`~repro.serving.plan_warmer.PlanWarmer`;
+                   when set, ``submit`` feeds it the admission stream,
+                   ``pump`` dispatches compile-ahead warm work for the
+                   buckets it predicts, and ``prewarm()`` warms
+                   configured traffic classes before the first request.
     coordinator:   a :class:`~repro.runtime.coordinator.
                    ProcessCoordinator` — when set, flushes are
                    *dispatched* to its worker processes instead of run
@@ -161,7 +213,12 @@ class SpGemmService:
                    the coordinator (re-run on a survivor); when the
                    whole pool is lost, the affected requests fall back
                    to this process's own in-process ladder — every
-                   submitted id still resolves."""
+                   submitted id still resolves.
+    bucket_caps:   optional shared sticky-cap dict (bucket -> esc
+                   cap_products); coordinator workers pass a per-process
+                   dict here so caps — and the warmed jit identities
+                   they pin — survive across per-task service
+                   instances."""
 
     def __init__(self, *, max_batch: int = 8, flush_timeout: float = 0.02,
                  engine: str = "auto",
@@ -170,7 +227,10 @@ class SpGemmService:
                  rules=dp.DEFAULT_HEURISTICS,
                  clock: Callable[[], float] = time.monotonic,
                  policy: Optional[dp.RetryPolicy] = None,
-                 coordinator=None):
+                 async_flushes: int = 0,
+                 warmer=None,
+                 coordinator=None,
+                 bucket_caps: Optional[dict] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -182,16 +242,38 @@ class SpGemmService:
         self.clock = clock
         self.policy = policy if policy is not None else dp.RetryPolicy()
         self.coordinator = coordinator
+        self.warmer = warmer
+        self.async_flushes = int(async_flushes)
+        self._executor = (cf.ThreadPoolExecutor(
+            max_workers=self.async_flushes,
+            thread_name_prefix="spgemm-flush")
+            if self.async_flushes > 0 else None)
+        # admission/bookkeeping lock: submit/pump/drain are thread-safe
+        # (concurrent client threads); ladder threads never take it
+        self._mu = threading.RLock()
+        self._caps_mu = threading.Lock()
         self._queues: dict[tuple, list[SpGemmRequest]] = {}
         self._opened: dict[tuple, float] = {}
-        self._bucket_caps: dict[tuple, int] = {}
+        # sticky esc caps per bucket; injectable so a coordinator worker
+        # keeps its caps (and the warmed jit identities they pin) across
+        # the per-task service instances it builds
+        self._bucket_caps: dict[tuple, int] = \
+            bucket_caps if bucket_caps is not None else {}
         self._next_id = 0
         self._by_id: dict[int, SpGemmRequest] = {}
-        # task_id -> (bucket key, requests, reason, t_flush, t0_wall)
+        # coordinator task_id -> (bucket, requests, reason, t_flush, t0)
         self._inflight: dict[int, tuple] = {}
+        # local future id -> (bucket, requests, reason, t_flush, t0, fut)
+        self._local_inflight: dict[int, tuple] = {}
+        self._next_local = 0
+        # warm work in flight: coordinator tid -> bucket / local id -> ...
+        self._warm_inflight: dict[int, tuple] = {}
+        self._local_warm: dict[int, tuple] = {}
+        self._next_warm = 0
         self.completed: list[SpGemmRequest] = []
         self.dead_letters: list[SpGemmRequest] = []
         self.flush_log: list[FlushRecord] = []
+        self.warm_log: list[dict] = []
 
     # -- intake ----------------------------------------------------------
 
@@ -204,19 +286,22 @@ class SpGemmService:
         they never reach a kernel, and never poison a co-bucketed
         batch."""
         validate_operands(A, B)
-        now = self.clock() if now is None else now
-        key = bucket_key(A, B)
-        req = SpGemmRequest(A=A, B=B, id=self._next_id, t_submit=now,
-                            bucket=key)
-        self._next_id += 1
-        self._by_id[req.id] = req
-        q = self._queues.setdefault(key, [])
-        if not q:
-            self._opened[key] = now
-        q.append(req)
-        if len(q) >= self.max_batch:
-            self._flush(key, now, reason="full")
-        return req
+        with self._mu:
+            now = self.clock() if now is None else now
+            key = bucket_key(A, B)
+            req = SpGemmRequest(A=A, B=B, id=self._next_id, t_submit=now,
+                                bucket=key)
+            self._next_id += 1
+            self._by_id[req.id] = req
+            if self.warmer is not None:
+                self.warmer.observe(key, A, B)
+            q = self._queues.setdefault(key, [])
+            if not q:
+                self._opened[key] = now
+            q.append(req)
+            if len(q) >= self.max_batch:
+                self._flush(key, now, reason="full")
+            return req
 
     def lookup(self, request_id: int) -> SpGemmRequest:
         """The request for an id — every submitted id resolves here,
@@ -226,7 +311,8 @@ class SpGemmService:
     @property
     def pending(self) -> int:
         return (sum(len(q) for q in self._queues.values())
-                + sum(len(reqs) for _, reqs, *_ in self._inflight.values()))
+                + sum(len(reqs) for _, reqs, *_ in self._inflight.values())
+                + sum(len(e[1]) for e in self._local_inflight.values()))
 
     # -- flushing --------------------------------------------------------
 
@@ -234,33 +320,47 @@ class SpGemmService:
         """Flush every bucket whose oldest request aged past the
         timeout; returns the number of requests completed.
 
-        In multi-process mode this is also the collection point: tasks
-        the worker pool finished since the last pump complete here."""
-        now = self.clock() if now is None else now
-        done = self._collect(block=False)
-        for key in [k for k, t in self._opened.items()
-                    if now - t >= self.flush_timeout]:
-            done += self._flush(key, now, reason="timeout")
-        return done
+        This is also the collection point for every asynchronous
+        completion — pool tasks and local executor flushes land here —
+        and the background warmer's heartbeat: buckets the warmer
+        predicts get their compile-ahead work dispatched."""
+        with self._mu:
+            now = self.clock() if now is None else now
+            done = self._collect(block=False)
+            done += self._collect_local()
+            self._collect_warm_local()
+            for key in [k for k, t in self._opened.items()
+                        if now - t >= self.flush_timeout]:
+                done += self._flush(key, now, reason="timeout")
+            self._pump_warmer()
+            return done
 
     def drain(self, now: Optional[float] = None,
               timeout: float = 300.0) -> int:
         """Flush everything regardless of age (shutdown / end of bench).
 
-        In multi-process mode, blocks until every dispatched task came
-        back (or ``timeout`` expired — the stragglers then run through
-        the local ladder, so drain still resolves every request)."""
-        now = self.clock() if now is None else now
-        done = 0
-        for key in list(self._queues):
-            done += self._flush(key, now, reason="drain")
-        if self._inflight:
-            done += self._collect(block=True, timeout=timeout)
-            for tid in list(self._inflight):
-                # pool never answered: serve the stragglers ourselves
-                done += self._finish_remote(
-                    tid, {"pool_lost": True, "why": "drain timeout"})
-        return done
+        Blocks until every dispatched task and in-flight async flush
+        came back (or ``timeout`` expired — remote stragglers then run
+        through the local ladder and local stragglers dead-letter, so
+        drain still resolves every request)."""
+        with self._mu:
+            now = self.clock() if now is None else now
+            done = 0
+            for key in list(self._queues):
+                done += self._flush(key, now, reason="drain")
+            if self._inflight or self._warm_inflight:
+                done += self._collect(block=True, timeout=timeout)
+                for tid in list(self._inflight):
+                    # pool never answered: serve the stragglers ourselves
+                    done += self._finish_remote(
+                        tid, {"pool_lost": True, "why": "drain timeout"})
+            done += self._wait_local(timeout)
+            return done
+
+    def close(self, wait: bool = True) -> None:
+        """Shut down the flush executor (no-op without async flushes)."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=wait, cancel_futures=not wait)
 
     def _stick_bucket_cap(self, key: tuple, sp):
         """Pin a bucket's esc product capacity to its running maximum.
@@ -270,12 +370,15 @@ class SpGemmService:
         of the same pad bucket — a fresh XLA compile mid-steady-state.
         Raising the cap to the bucket's historical max is always safe
         (it is an upper bound) and makes the jit_key stable once the
-        bucket has seen its heaviest traffic."""
+        bucket has seen its heaviest traffic.  Compile-ahead warming
+        seeds the same map, so a warmed bucket's first real flush
+        already pins to the warmed capacity."""
         if sp.base.engine != "esc":
             return sp
         cap = sp.base.kwargs_dict.get("cap_products")
-        sticky = max(cap, self._bucket_caps.get(key, 0))
-        self._bucket_caps[key] = sticky
+        with self._caps_mu:
+            sticky = max(cap, self._bucket_caps.get(key, 0))
+            self._bucket_caps[key] = sticky
         if sticky == cap:
             return sp
         kwargs = tuple(sorted({**sp.base.kwargs_dict,
@@ -292,23 +395,6 @@ class SpGemmService:
                               t=self.clock())
         r.t_done = self.clock()
         self.dead_letters.append(r)
-
-    def _expire(self, reqs: list, attempts: int) -> list:
-        """Dead-letter requests whose age passed the policy deadline;
-        returns the survivors."""
-        if self.policy.deadline_s is None:
-            return reqs
-        now = self.clock()
-        keep = []
-        for r in reqs:
-            if now - r.t_submit >= self.policy.deadline_s:
-                self._dead_letter(
-                    r, "deadline", "DeadlineExceeded",
-                    f"age {now - r.t_submit:.3f}s >= deadline "
-                    f"{self.policy.deadline_s}s", attempts)
-            else:
-                keep.append(r)
-        return keep
 
     @staticmethod
     def _check_outputs(out, reqs: list) -> None:
@@ -329,9 +415,12 @@ class SpGemmService:
 
     def _flush(self, key: tuple, now: float, reason: str) -> int:
         """Flush one bucket: dispatched to the worker pool when a
-        coordinator is attached, run inline otherwise."""
+        coordinator is attached, to the flush executor under
+        ``async_flushes``, run inline otherwise."""
         if self.coordinator is not None:
             return self._flush_remote(key, now, reason)
+        if self._executor is not None:
+            return self._flush_async(key, now, reason)
         return self._flush_local(key, now, reason)
 
     # -- multi-process flushing -----------------------------------------
@@ -350,6 +439,10 @@ class SpGemmService:
         payload = coord.make_flush_payload(
             reqs, bucket=key, engine=self.engine, max_batch=self.max_batch,
             policy=self.policy)
+        with self._caps_mu:
+            sticky = self._bucket_caps.get(key)
+        if sticky:
+            payload["sticky_cap"] = sticky
         try:
             tid = self.coordinator.submit(payload)
         except coord.PoolLost:
@@ -360,15 +453,19 @@ class SpGemmService:
 
     def _collect(self, block: bool, timeout: float = 300.0) -> int:
         """Absorb finished pool tasks into request completions."""
-        if self.coordinator is None or not self._inflight:
+        if self.coordinator is None or \
+                not (self._inflight or self._warm_inflight):
             return 0
         done = 0
         deadline = time.monotonic() + timeout
-        while self._inflight:
+        while True:
             results = self.coordinator.poll(timeout=0.2 if block else 0.0)
             for tid, res in results:
-                done += self._finish_remote(tid, res)
-            if not block:
+                if tid in self._warm_inflight:
+                    self._finish_warm_remote(tid, res)
+                else:
+                    done += self._finish_remote(tid, res)
+            if not block or not self._inflight:
                 break
             if not results and time.monotonic() >= deadline:
                 break
@@ -415,32 +512,112 @@ class SpGemmService:
             tier=f.get("tier", "planned"),
             attempts=f.get("attempts", 1),
             n_failed=len(reqs) - done_n,
-            errors=tuple(f.get("errors", ()))))
+            errors=tuple(f.get("errors", ())),
+            warm_hit=bool(f.get("warm_hit", False))))
         return done_n
 
-    # -- in-process flushing --------------------------------------------
+    # -- async local flushing -------------------------------------------
 
-    def _flush_local(self, key: tuple, now: float, reason: str) -> int:
-        """Supervised flush: planned tier with bounded retries, then the
-        degradation ladder, then per-request isolation.  Surviving
-        requests always complete; failures dead-letter individually."""
+    def _flush_async(self, key: tuple, now: float, reason: str) -> int:
+        """Hand one bucket's ladder to the flush executor and return —
+        admission never waits on execution.  ``pump``/``drain`` land
+        the outcome."""
         reqs = self._queues.pop(key, [])
         self._opened.pop(key, None)
         if not reqs:
             return 0
+        tid = self._next_local
+        self._next_local += 1
+        fut = self._executor.submit(self._run_ladder, key, list(reqs),
+                                    reason)
+        self._local_inflight[tid] = (key, reqs, reason, now,
+                                     time.perf_counter(), fut)
+        return 0
+
+    def _collect_local(self, wait_s: float = 0.0) -> int:
+        """Land every finished executor flush; optionally wait up to
+        ``wait_s`` for one to finish first."""
+        if not self._local_inflight:
+            return 0
+        if wait_s > 0.0:
+            cf.wait([e[5] for e in self._local_inflight.values()],
+                    timeout=wait_s, return_when=cf.FIRST_COMPLETED)
+        done = 0
+        ready = [tid for tid, e in list(self._local_inflight.items())
+                 if e[5].done()]
+        for tid in ready:
+            key, reqs, reason, t_flush, t0, fut = \
+                self._local_inflight.pop(tid)
+            try:
+                outcome = fut.result()
+            except Exception as e:  # ladder itself crashed (injected/bug)
+                outcome = _FlushOutcome(
+                    results={}, dead={}, engine="?", source="failed",
+                    tier="failed", attempts=1,
+                    errors=(f"{type(e).__name__}: {e}",))
+            done += self._land(key, reqs, reason, t_flush, t0, outcome)
+        return done
+
+    def _wait_local(self, timeout: float) -> int:
+        """Drain-time barrier for executor flushes: wait, land, and
+        dead-letter anything still running past the deadline (a hung
+        ladder must not leave ids unresolved)."""
+        done = 0
+        deadline = time.monotonic() + timeout
+        while self._local_inflight and time.monotonic() < deadline:
+            done += self._collect_local(
+                wait_s=min(0.1, max(deadline - time.monotonic(), 0.0)))
+        for tid in list(self._local_inflight):
+            key, reqs, reason, t_flush, t0, fut = \
+                self._local_inflight.pop(tid)
+            outcome = _FlushOutcome(
+                results={}, dead={}, engine="?", source="failed",
+                tier="abandoned", attempts=1,
+                errors=("drain timeout: flush still in executor",))
+            done += self._land(key, reqs, reason, t_flush, t0, outcome)
+        return done
+
+    # -- the supervised ladder ------------------------------------------
+
+    def _run_ladder(self, key: tuple, reqs: list,
+                    reason: str) -> _FlushOutcome:
+        """One bucket's supervised execution: planned tier with bounded
+        retries, then the degradation ladder, then per-request
+        isolation.  Reads service config but mutates no shared
+        bookkeeping (sticky caps are the one lock-guarded exception), so
+        concurrent ladders — different buckets on executor threads —
+        cannot interleave each other's state; ``_land`` applies the
+        returned outcome under the service lock."""
         fi.fire("service.flush", bucket=key, reason=reason)
-        t0 = time.perf_counter()
-        survivors = list(reqs)
+        results: dict[int, tuple] = {}
+        dead: dict[int, tuple] = {}
+        pending = list(enumerate(reqs))
         attempts = 0
         errors: list[str] = []
         out = None
         sp = None
         engine, source, tier = "?", "failed", "planned"
+        warm_hit = False
+
+        def expire(pend):
+            """Move deadline-passed requests to ``dead``; keep the rest."""
+            if self.policy.deadline_s is None:
+                return pend
+            now = self.clock()
+            keep = []
+            for i, r in pend:
+                if now - r.t_submit >= self.policy.deadline_s:
+                    dead[i] = ("deadline", "DeadlineExceeded",
+                               f"age {now - r.t_submit:.3f}s >= deadline "
+                               f"{self.policy.deadline_s}s", attempts)
+                else:
+                    keep.append((i, r))
+            return keep
 
         # -- tier 0: the planned sharded flush, with bounded retries ----
         for attempt in range(1, self.policy.max_attempts + 1):
-            survivors = self._expire(survivors, attempts)
-            if not survivors:
+            pending = expire(pending)
+            if not pending:
                 break
             attempts += 1
             try:
@@ -452,10 +629,12 @@ class SpGemmService:
                                             rules=self.rules)
                     sp = self._stick_bucket_cap(key, sp)
                     return shard.execute_sharded(sp, A, B)
-                out = self._run_batched(survivors, key, planned)
-                self._check_outputs(out, survivors)
+                out = self._run_batched([r for _, r in pending], key,
+                                        planned)
+                self._check_outputs(out, pending)
                 engine, source, tier = sp.base.engine, sp.base.source, \
                     "planned"
+                warm_hit = dp.jit_warmed(sp.base.jit_key)
                 break
             except Exception as e:
                 errors.append(f"planned#{attempt}: {type(e).__name__}: {e}")
@@ -464,7 +643,7 @@ class SpGemmService:
                     self.policy.sleep(self.policy.backoff_s(attempt))
 
         # -- tier 1..n: the degradation ladder --------------------------
-        if out is None and survivors:
+        if out is None and pending:
             if sp is not None:
                 # the planned combo kept crashing this bucket: poison it
                 # so the next plan does not re-select the same kernel
@@ -479,8 +658,8 @@ class SpGemmService:
                 spec = dp.available_engines().get(eng)
                 if spec is None or not spec.batchable:
                     continue  # non-batchable tiers are the isolation path
-                survivors = self._expire(survivors, attempts)
-                if not survivors:
+                pending = expire(pending)
+                if not pending:
                     break
                 attempts += 1
                 try:
@@ -489,8 +668,9 @@ class SpGemmService:
                                              backend=bk or "auto",
                                              cache=self.cache)
                         return dp.execute_batched(bp, A, B)
-                    out = self._run_batched(survivors, key, degraded)
-                    self._check_outputs(out, survivors)
+                    out = self._run_batched([r for _, r in pending], key,
+                                            degraded)
+                    self._check_outputs(out, pending)
                     engine, source = eng, "fallback"
                     tier = f"degraded:{eng}" + (f"/{bk}" if bk else "")
                     break
@@ -499,47 +679,207 @@ class SpGemmService:
                                   f"{type(e).__name__}: {e}")
                     out = None
 
-        done_n = 0
-        if out is not None and survivors:
-            t_done = self.clock()
-            for i, r in enumerate(survivors):
-                r.result = out[i]
-                r.t_done = t_done
-                r.engine = engine
-                r.tier = tier
-            self.completed.extend(survivors)
-            done_n = len(survivors)
-        elif survivors:
+        if out is not None and pending:
+            for j, (i, _) in enumerate(pending):
+                results[i] = (out[j], engine, tier)
+        elif pending:
             # -- final tier: per-request isolation on the reference
             # engine — one poisoned request must not sink its batch ----
             tier, engine, source = "isolated", "scl-array", "isolated"
-            for r in survivors:
-                survivors_one = self._expire([r], attempts)
-                if not survivors_one:
+            for i, r in pending:
+                if not expire([(i, r)]):
                     continue
                 attempts += 1
                 try:
                     res = dp.spgemm(r.A, r.B, engine="scl-array",
                                     cache=self.cache)
                     dp.check_result(res)
-                    r.result = res
-                    r.t_done = self.clock()
-                    r.engine = engine
-                    r.tier = tier
-                    self.completed.append(r)
-                    done_n += 1
+                    results[i] = (res, engine, tier)
                 except Exception as e:
                     errors.append(f"isolate#{r.id}: {type(e).__name__}: {e}")
-                    self._dead_letter(r, "isolate", type(e).__name__,
-                                      str(e), attempts)
+                    dead[i] = ("isolate", type(e).__name__, str(e), attempts)
 
-        wall = time.perf_counter() - t0
+        return _FlushOutcome(results=results, dead=dead, engine=engine,
+                             source=source, tier=tier,
+                             attempts=max(attempts, 1),
+                             errors=tuple(errors), warm_hit=warm_hit)
+
+    def _land(self, key: tuple, reqs: list, reason: str, t_flush: float,
+              t0: float, outcome: _FlushOutcome) -> int:
+        """Apply one ladder outcome to service bookkeeping (admission
+        side, under the service lock): stamp results, dead-letter
+        failures, append the flush record."""
+        t_done = self.clock()
+        done_n = 0
+        for i, r in enumerate(reqs):
+            res = outcome.results.get(i)
+            if res is not None:
+                r.result, r.engine, r.tier = res
+                r.t_done = t_done
+                self.completed.append(r)
+                done_n += 1
+                continue
+            d = outcome.dead.get(i)
+            if d is None:
+                d = ("flush", "Unresolved",
+                     "; ".join(outcome.errors) or "no outcome recorded",
+                     outcome.attempts)
+            self._dead_letter(r, *d)
         self.flush_log.append(FlushRecord(
-            bucket=key, n_requests=len(reqs), engine=engine,
-            source=source, reason=reason, t=now, wall_s=wall,
-            tier=tier, attempts=max(attempts, 1),
-            n_failed=len(reqs) - done_n, errors=tuple(errors)))
+            bucket=key, n_requests=len(reqs), engine=outcome.engine,
+            source=outcome.source, reason=reason, t=t_flush,
+            wall_s=time.perf_counter() - t0, tier=outcome.tier,
+            attempts=outcome.attempts, n_failed=len(reqs) - done_n,
+            errors=outcome.errors, warm_hit=outcome.warm_hit))
         return done_n
+
+    # -- in-process flushing --------------------------------------------
+
+    def _flush_local(self, key: tuple, now: float, reason: str) -> int:
+        """Synchronous flush: run the ladder inline and land it."""
+        reqs = self._queues.pop(key, [])
+        self._opened.pop(key, None)
+        if not reqs:
+            return 0
+        t0 = time.perf_counter()
+        outcome = self._run_ladder(key, reqs, reason)
+        return self._land(key, reqs, reason, now, t0, outcome)
+
+    # -- compile-ahead warming ------------------------------------------
+
+    def prewarm(self, buckets=None, block: bool = True,
+                timeout: float = 300.0) -> int:
+        """Warm pad buckets ahead of traffic.
+
+        ``buckets`` defaults to everything the warmer currently
+        predicts (configured traffic classes first).  Warm work runs on
+        the coordinator pool or the flush executor when available,
+        inline otherwise; with ``block`` the call returns only after
+        the dispatched warms finished.  Returns the number of buckets
+        dispatched."""
+        with self._mu:
+            if buckets is None:
+                buckets = self.warmer.due() if self.warmer is not None \
+                    else []
+            n = 0
+            for b in buckets:
+                n += int(self._dispatch_warm(tuple(b)))
+            if block:
+                self._await_warms(timeout)
+            return n
+
+    def _pump_warmer(self) -> None:
+        """Dispatch compile-ahead work for freshly predicted buckets —
+        only when an async vehicle exists (warming inline from ``pump``
+        would block admission, the very thing warming is for)."""
+        if self.warmer is None:
+            return
+        if self.coordinator is None and self._executor is None:
+            return
+        for bucket in self.warmer.due():
+            self._dispatch_warm(bucket)
+
+    def _dispatch_warm(self, bucket: tuple) -> bool:
+        """Route one bucket's warm to the pool / executor / inline."""
+        sample = self.warmer.sample(bucket) \
+            if self.warmer is not None else None
+        with self._caps_mu:
+            sticky = self._bucket_caps.get(bucket)
+        if self.coordinator is not None:
+            from repro.runtime import coordinator as coord
+            payload = {"kind": "warm", "bucket": bucket,
+                       "engine": self.engine, "max_batch": self.max_batch,
+                       "sticky_cap": sticky}
+            if sample is not None:
+                payload["pair"] = (coord.pack_csr(sample[0]),
+                                   coord.pack_csr(sample[1]))
+            try:
+                tid = self.coordinator.submit(payload)
+            except coord.PoolLost:
+                pass  # fall through to a local warm
+            else:
+                self._warm_inflight[tid] = (bucket, time.perf_counter())
+                if self.warmer is not None:
+                    self.warmer.mark_pending(bucket)
+                return True
+        if self._executor is not None:
+            fut = self._executor.submit(self._warm_local, bucket, sample,
+                                        sticky)
+            tid = self._next_warm
+            self._next_warm += 1
+            self._local_warm[tid] = (bucket, fut, time.perf_counter())
+            if self.warmer is not None:
+                self.warmer.mark_pending(bucket)
+            return True
+        # no async vehicle: warm inline (explicit prewarm path)
+        try:
+            res = self._warm_local(bucket, sample, sticky)
+        except Exception as e:
+            self._note_warm_failed(bucket, f"{type(e).__name__}: {e}")
+            return False
+        self._note_warm_ok(bucket, res)
+        return True
+
+    def _warm_local(self, bucket: tuple, sample, sticky) -> dict:
+        return dp.warm_bucket(bucket, engine=self.engine,
+                              max_batch=self.max_batch, cache=self.cache,
+                              mesh=self.mesh, rules=self.rules,
+                              sample=sample, sticky_cap=sticky)
+
+    def _note_warm_ok(self, bucket: tuple, res: dict) -> None:
+        cap = res.get("cap")
+        if cap:
+            with self._caps_mu:
+                self._bucket_caps[bucket] = max(
+                    int(cap), self._bucket_caps.get(bucket, 0))
+        self.warm_log.append({"ok": True, **res})
+        if self.warmer is not None:
+            self.warmer.mark_warmed(bucket)
+
+    def _note_warm_failed(self, bucket: tuple, why: str) -> None:
+        self.warm_log.append({"ok": False, "bucket": bucket, "error": why})
+        if self.warmer is not None:
+            self.warmer.mark_failed(bucket, why)
+
+    def _collect_warm_local(self) -> None:
+        for tid in [t for t, e in list(self._local_warm.items())
+                    if e[1].done()]:
+            bucket, fut, _ = self._local_warm.pop(tid)
+            try:
+                res = fut.result()
+            except Exception as e:
+                self._note_warm_failed(bucket, f"{type(e).__name__}: {e}")
+            else:
+                self._note_warm_ok(bucket, res)
+
+    def _finish_warm_remote(self, tid: int, res: dict) -> None:
+        entry = self._warm_inflight.pop(tid, None)
+        if entry is None:
+            return
+        bucket, _ = entry
+        w = res.get("warm") if isinstance(res, dict) else None
+        if w is None:
+            err = res.get("error") or {}
+            why = err.get("message") or res.get("why") or "warm failed"
+            self._note_warm_failed(bucket, str(why))
+        else:
+            self._note_warm_ok(bucket, w)
+
+    def _await_warms(self, timeout: float) -> None:
+        """Block until in-flight warm work resolved (prewarm barrier)."""
+        deadline = time.monotonic() + timeout
+        while (self._warm_inflight or self._local_warm) \
+                and time.monotonic() < deadline:
+            self._collect_warm_local()
+            if self._warm_inflight and self.coordinator is not None:
+                for tid, res in self.coordinator.poll(timeout=0.1):
+                    if tid in self._warm_inflight:
+                        self._finish_warm_remote(tid, res)
+                    else:
+                        self._finish_remote(tid, res)
+            elif self._local_warm:
+                cf.wait([e[1] for e in self._local_warm.values()],
+                        timeout=0.1, return_when=cf.FIRST_COMPLETED)
 
     # -- accounting ------------------------------------------------------
 
@@ -559,6 +899,7 @@ class SpGemmService:
             "n_buckets": len({f.bucket for f in flushes}),
             "pending": self.pending,
             "n_dead_letters": len(dead),
+            "n_warmed": sum(1 for w in self.warm_log if w.get("ok")),
         }
         resolved = len(done) + len(dead)
         if resolved:
@@ -585,6 +926,12 @@ class SpGemmService:
                                         if f.plan_hit) / n_req)
             out["flush_hit_rate"] = (sum(f.plan_hit for f in flushes)
                                      / len(flushes))
+            # warm hit: the flush landed on a computation compiled ahead
+            # of traffic (request-weighted, like plan_hit_rate)
+            out["warm_hit_rate"] = (sum(f.n_requests for f in flushes
+                                        if f.warm_hit) / n_req)
+            out["flush_warm_hit_rate"] = (sum(f.warm_hit for f in flushes)
+                                          / len(flushes))
             out["mean_flush_wall_s"] = float(np.mean([f.wall_s
                                                       for f in flushes]))
             out["mean_lanes_per_flush"] = float(np.mean([f.n_requests

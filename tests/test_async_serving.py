@@ -1,0 +1,259 @@
+"""Async pipelined serving + compile-ahead plan warming (PR 9).
+
+Covers the PlanWarmer's prediction bookkeeping (pure, clock-free), the
+warm -> first-flush jit handoff (a prewarmed bucket's first real flush
+must land on the pre-compiled computation), concurrent executor flushes
+(bucket state must not interleave), drain under in-flight async work
+(every id resolves), and chaos: a worker SIGKILLed *mid-warm* must cost
+at most the warm — availability stays 1.0.  The multiprocess test
+spawns real workers and real SIGKILLs, same as ``test_multiproc``."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dp
+from repro.core.formats import random_sparse
+from repro.runtime import faultinject as fi
+from repro.serving import spgemm_service as svc
+from repro.serving.plan_warmer import PlanWarmer, neighbor_buckets
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warm_stats():
+    dp.reset_warm_stats()
+    yield
+    dp.reset_warm_stats()
+
+
+def _mat(n=48, density=0.02, seed=0, pattern="uniform"):
+    return random_sparse(n, n, density, seed=seed, pattern=pattern)
+
+
+def _dense(csr):
+    return np.asarray(csr.to_dense(), np.float64)
+
+
+# ---------------------------------------------------------------------------
+# PlanWarmer prediction (pure bookkeeping, no execution)
+# ---------------------------------------------------------------------------
+
+def test_warmer_configured_buckets_predicted_first():
+    A, B = _mat(seed=1), _mat(n=32, seed=2)
+    w = PlanWarmer(configured=[(A, A)], neighbors=False)
+    for _ in range(3):
+        w.observe(svc.bucket_key(B, B))
+    pred = w.predict()
+    assert pred[0] == svc.bucket_key(A, A)       # configured outranks observed
+    assert svc.bucket_key(B, B) in pred
+
+
+def test_warmer_frequency_ranking_and_min_count():
+    w = PlanWarmer(neighbors=False, min_count=2)
+    hot, cold = ("h",), ("c",)
+    for _ in range(5):
+        w.observe(hot)
+    w.observe(cold)
+    assert w.predict() == [hot]                  # cold below min_count
+    w.observe(cold)
+    assert w.predict() == [hot, cold]
+
+
+def test_warmer_due_excludes_warmed_pending_failed():
+    w = PlanWarmer(configured=[("a",), ("b",), ("c",)], neighbors=False)
+    w.mark_pending(("a",))
+    w.mark_warmed(("b",))
+    w.mark_failed(("c",), "boom")
+    assert w.due() == []
+    w.mark_warmed(("a",))
+    assert w.is_warmed(("a",)) and w.stats()["failed"] == 1
+
+
+def test_warmer_budget_caps_due():
+    w = PlanWarmer(configured=[(i,) for i in range(8)], neighbors=False,
+                   max_warms=3)
+    assert len(w.due()) == 3
+
+
+def test_neighbor_buckets_guard_pow2_boundaries():
+    b = ((48, 48), (48, 48), 64, 64)
+    nbs = neighbor_buckets(b)
+    assert ((48, 48), (48, 48), 128, 128) in nbs
+    assert ((48, 48), (48, 48), 32, 32) in nbs
+    # capacity already covers the full operand: no reachable up-neighbor
+    full = ((4, 4), (4, 4), 16, 16)
+    assert all(nb[2] <= 16 for nb in neighbor_buckets(full))
+
+
+def test_warmer_keeps_heaviest_sample():
+    w = PlanWarmer(neighbors=False)
+    light, heavy = _mat(density=0.01, seed=1), _mat(density=0.05, seed=2)
+    b = ("bucket",)
+    w.observe(b, heavy, heavy)
+    # a later, lighter pair must not evict the heavier retained sample —
+    # the heavy pair's capacities upper-bound the bucket's traffic best
+    w.observe(b, light, light)
+    assert w.sample(b) == (heavy, heavy)
+
+
+# ---------------------------------------------------------------------------
+# warming compiles predicted buckets before the first submit
+# ---------------------------------------------------------------------------
+
+def test_prewarm_gives_plan_memo_hit_on_first_request(cache):
+    A = _mat(seed=1)
+    warmer = PlanWarmer(configured=[(A, A)], neighbors=False)
+    service = svc.SpGemmService(cache=cache, max_batch=4, flush_timeout=1e9,
+                                warmer=warmer)
+    assert service.prewarm() == 1
+    assert service.warm_log[-1]["ok"]
+    assert warmer.is_warmed(svc.bucket_key(A, A))
+    assert dp.warm_stats()["warmed"] >= 1
+    # the *first* flush of real traffic lands on the pre-compiled jit
+    reqs = [service.submit(_mat(seed=s), _mat(seed=s)) for s in (1, 2, 3, 4)]
+    assert all(r.done and not r.failed for r in reqs)
+    f = service.flush_log[-1]
+    assert f.warm_hit and f.tier == "planned"
+    assert dp.warm_stats()["hits"] >= 1
+    assert service.stats()["warm_hit_rate"] == 1.0
+    ref = dp.spgemm(reqs[0].A, reqs[0].B, engine="scl-array")
+    np.testing.assert_allclose(_dense(reqs[0].result), _dense(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_unwarmed_bucket_counts_as_warm_miss(cache):
+    service = svc.SpGemmService(cache=cache, max_batch=2, flush_timeout=1e9)
+    reqs = [service.submit(_mat(seed=s), _mat(seed=s)) for s in (1, 2)]
+    assert all(r.done for r in reqs)
+    assert not service.flush_log[-1].warm_hit
+    assert service.stats()["warm_hit_rate"] == 0.0
+
+
+def test_pump_dispatches_warm_work_from_admission_stream(cache):
+    warmer = PlanWarmer(neighbors=False)
+    service = svc.SpGemmService(cache=cache, max_batch=8, flush_timeout=1e9,
+                                async_flushes=1, warmer=warmer)
+    try:
+        service.submit(_mat(seed=1), _mat(seed=1))
+        service.pump()                    # observes the bucket -> warm job
+        service.prewarm(buckets=[], block=True)   # barrier on in-flight warms
+        assert warmer.is_warmed(svc.bucket_key(_mat(seed=1), _mat(seed=1)))
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrent executor flushes
+# ---------------------------------------------------------------------------
+
+def test_concurrent_flushes_do_not_interleave_bucket_state(cache):
+    """Two buckets flushing at the same time (a barrier inside the flush
+    fault site proves the overlap) must each land their own results,
+    provenance, and ids — no cross-bucket interleaving."""
+    barrier = threading.Barrier(2, timeout=60.0)
+    spec = fi.FaultSpec(site="service.flush", kind="call", max_fires=2,
+                        action=lambda **ctx: barrier.wait())
+    service = svc.SpGemmService(cache=cache, max_batch=2, flush_timeout=1e9,
+                                async_flushes=2)
+    try:
+        with fi.injected(spec):
+            ra = [service.submit(_mat(n=32, seed=s), _mat(n=32, seed=s))
+                  for s in (1, 2)]
+            rb = [service.submit(_mat(n=48, seed=s), _mat(n=48, seed=s))
+                  for s in (1, 2)]
+            service.drain()
+        assert barrier.n_waiting == 0            # both ladders met inside
+        assert all(r.done and not r.failed for r in ra + rb)
+        assert service.pending == 0 and not service.dead_letters
+        by_bucket = {f.bucket: f for f in service.flush_log}
+        assert len(by_bucket) == 2
+        assert all(f.n_requests == 2 and f.tier == "planned"
+                   for f in by_bucket.values())
+        for r in ra + rb:
+            ref = dp.spgemm(r.A, r.B, engine="scl-array")
+            np.testing.assert_allclose(_dense(r.result), _dense(ref),
+                                       rtol=1e-5, atol=1e-6)
+    finally:
+        service.close()
+
+
+def test_drain_under_inflight_async_flushes_resolves_every_id(cache):
+    """drain() called while executor flushes are still running must block
+    for them and resolve every submitted id exactly once."""
+    spec = fi.FaultSpec(site="service.flush", kind="hang", delay_s=0.3,
+                        max_fires=None)
+    service = svc.SpGemmService(cache=cache, max_batch=2, flush_timeout=1e9,
+                                async_flushes=2)
+    try:
+        with fi.injected(spec):
+            reqs = [service.submit(_mat(n=n, seed=s), _mat(n=n, seed=s))
+                    for n in (32, 48, 64) for s in (1, 2)]
+            service.drain()
+        assert service.pending == 0
+        assert all(r.done for r in reqs)
+        assert len(service.completed) + len(service.dead_letters) == len(reqs)
+        assert not service.dead_letters
+        assert {r.id for r in service.completed} == {r.id for r in reqs}
+    finally:
+        service.close()
+
+
+def test_async_admission_does_not_block_on_flush(cache):
+    """With async flushes, submit() returns while a slow flush is still
+    in the executor — the admission path must stay non-blocking."""
+    release = threading.Event()
+    spec = fi.FaultSpec(site="service.flush", kind="call", max_fires=1,
+                        action=lambda **ctx: release.wait(timeout=60.0))
+    service = svc.SpGemmService(cache=cache, max_batch=2, flush_timeout=1e9,
+                                async_flushes=1)
+    try:
+        with fi.injected(spec):
+            held = [service.submit(_mat(n=32, seed=s), _mat(n=32, seed=s))
+                    for s in (1, 2)]       # full bucket -> flush in executor
+            assert not any(r.done for r in held)   # still held at the gate
+            fresh = service.submit(_mat(n=48, seed=3), _mat(n=48, seed=3))
+            assert fresh.id > held[-1].id          # admission kept moving
+            release.set()
+            service.drain()
+        assert all(r.done and not r.failed for r in held + [fresh])
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos: SIGKILL mid-warm in a real worker pool
+# ---------------------------------------------------------------------------
+
+def test_worker_sigkill_mid_warm_keeps_availability(tmp_path):
+    """A worker SIGKILLed inside the warm task (the ``service.warm``
+    fault site) must cost at most the warm itself: the pool recovers,
+    traffic runs (cold), and every request resolves — availability 1.0."""
+    from repro.runtime import coordinator as coord
+    cache_path = str(tmp_path / "autotune.json")
+    kill = fi.FaultSpec(site="service.warm", kind="kill_process", max_fires=1)
+    A = _mat(seed=1)
+    with coord.ProcessCoordinator(
+            2, cache_path=cache_path, fault_specs=[kill],
+            max_task_retries=1) as pool:
+        warmer = PlanWarmer(configured=[(A, A)], neighbors=False)
+        service = svc.SpGemmService(
+            cache=dp.AutotuneCache(cache_path), max_batch=4,
+            flush_timeout=1e9, coordinator=pool, warmer=warmer,
+            policy=dp.RetryPolicy(max_attempts=5, backoff_base_s=0.0))
+        service.prewarm()                 # the warm dies with its worker(s)
+        assert any(e["event"] == "worker_lost" for e in pool.events)
+        reqs = [service.submit(_mat(seed=s), _mat(seed=s))
+                for s in (1, 2, 3, 4)]
+        service.drain()
+        assert all(r.done for r in reqs)
+        st = service.stats()
+        assert st["availability"] == 1.0 and not service.dead_letters
+        for r in reqs:
+            ref = dp.spgemm(r.A, r.B, engine="scl-array")
+            np.testing.assert_allclose(_dense(r.result), _dense(ref),
+                                       rtol=1e-5, atol=1e-6)
