@@ -149,6 +149,17 @@ def main() -> int:
                          "170000us ~= 10x better than the 1.67s "
                          "synchronous steady-state p50; always "
                          "warn-only)")
+    ap.add_argument("--regret-ceiling", type=float, default=0.5,
+                    help="flag model rows whose regret_model (mean "
+                         "leave-one-bucket-out regret vs the measured "
+                         "oracle) exceeds this ceiling, and any row "
+                         "where the model's regret is not strictly "
+                         "below the heuristic table's (default 0.5; "
+                         "always warn-only)")
+    ap.add_argument("--select-budget", type=float, default=2.0,
+                    help="flag model rows whose select_budget_ratio "
+                         "(model plan path vs cached-plan path) exceeds "
+                         "this factor (default 2.0; always warn-only)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on regressions (default: warn only)")
     args = ap.parse_args()
@@ -194,6 +205,31 @@ def main() -> int:
         if p50 is not None and p50 > args.p50_floor_us:
             print(f"P50 CEILING {section}: serve.async.p50 {p50:.1f}us > "
                   f"{args.p50_floor_us:.0f}us (warn-only)")
+    # learned-dispatch gates (warn-only, absolute — compared on the
+    # current run): the LOBO replay's model regret must stay under the
+    # ceiling AND strictly below the heuristic table's regret, and the
+    # model plan path must stay within the cached-plan time budget
+    cur_regret = load_derived(args.current, args.sections or None,
+                              "regret_model")
+    cur_h_regret = load_derived(args.current, args.sections or None,
+                                "regret_heuristic")
+    for key, v in sorted(cur_regret.items()):
+        section, name = key
+        if v > args.regret_ceiling:
+            print(f"REGRET CEILING {section}: {name} regret_model "
+                  f"{v:.4f} > {args.regret_ceiling:.2f} (warn-only)")
+        h = cur_h_regret.get(key)
+        if h is not None and v >= h:
+            print(f"REGRET vs HEURISTIC {section}: {name} regret_model "
+                  f"{v:.4f} >= regret_heuristic {h:.4f} — the model is "
+                  "not beating the rules table (warn-only)")
+    for (section, name), v in sorted(
+            load_derived(args.current, args.sections or None,
+                         "select_budget_ratio").items()):
+        if v > args.select_budget:
+            print(f"SELECT BUDGET {section}: {name} model plan path "
+                  f"{v:.2f}x the cached-plan path > "
+                  f"{args.select_budget:.1f}x budget (warn-only)")
     if not regressions:
         print("no regressions")
         return 0

@@ -9,6 +9,7 @@
   moe     — zipper MoE dispatch microbenchmark (framework integration)
   kernels — stream sort/merge kernel timings   (per-kernel perf)
   dispatch— engine-registry auto selection + batched execution path
+  model   — learned-dispatch offline eval (LOBO regret vs oracle)
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention, and
 writes one machine-readable ``BENCH_<section>.json`` per section run (the
@@ -394,6 +395,96 @@ def dispatch_bench(mats, fast=False):
               f"lanes={len(lanes)}|speedup_vs_host={t_z / t_zf:.2f}")
 
 
+def model_bench(fast=False):
+    """Learned-dispatch section: build a measurement dataset with autotune
+    sweeps over a synthetic regime grid, replay the cached timings offline
+    with leave-one-bucket-out splits (regret vs. oracle, selection accuracy
+    vs. the heuristic table), and measure the model plan path against the
+    cached-plan budget."""
+    from repro.core import dispatch as dp
+    from repro.core.formats import random_sparse
+    from repro.models import dispatch_model as dm
+    print("# model: learned dispatch — dataset, LOBO replay, plan budget")
+    cache = dp.AutotuneCache(os.path.join(
+        tempfile.mkdtemp(prefix="bench_model_"), "cache.json"))
+    # dataset: one autotune sweep per (size, density) regime; every sweep
+    # logs its full per-candidate timing vector + features into the cache
+    sizes = (32, 48, 64, 96, 128, 192) if fast \
+        else (32, 48, 64, 96, 128, 192, 256, 384)
+    densities = (0.005, 0.02)
+    t0 = time.perf_counter()
+    n_sweeps = 0
+    for i, n in enumerate(sizes):
+        for j, dens in enumerate(densities):
+            A = random_sparse(n, n, dens, seed=10 * i + j)
+            B = random_sparse(n, n, dens, seed=500 + 10 * i + j)
+            dp.plan(A, B, autotune=True, cache=cache, model=False)
+            n_sweeps += 1
+    t_ds = time.perf_counter() - t0
+    samples = dm.samples_from_entries(cache.entries())
+    _emit("model.dataset", t_ds,
+          f"buckets={len(samples)}|sweeps={n_sweeps}")
+    # leave-one-bucket-out replay: train on all-but-one bucket, select on
+    # the held-out one, score against the bucket's own measured timings.
+    # The heuristic comparator is scored generously: its engine pick is
+    # charged the *best* measured time over that engine's backends.
+    steps = 150 if fast else 300
+    t0 = time.perf_counter()
+    reg_m, reg_h, acc_m, acc_h = [], [], 0, 0
+    for i, s in enumerate(samples):
+        m = dm.DispatchModel.train(samples[:i] + samples[i + 1:],
+                                   steps=steps)
+        t = s["timings"]
+        oracle = min(t, key=t.get)
+        sel = m.select(s["features"], allowed=set(t))
+        mc = sel.combo if sel is not None else oracle
+        eng_h, _ = dp.choose_engine(s["features"], dp.DEFAULT_HEURISTICS)
+        h_times = [v for c, v in t.items()
+                   if dp.split_combo(c)[0] == eng_h]
+        th = min(h_times) if h_times else max(t.values())
+        reg_m.append(t[mc] / t[oracle] - 1.0)
+        reg_h.append(th / t[oracle] - 1.0)
+        acc_m += int(mc == oracle)
+        acc_h += int(eng_h == dp.split_combo(oracle)[0])
+    t_eval = time.perf_counter() - t0
+    folds = max(1, len(samples))
+    _emit("model.regret_vs_oracle", t_eval,
+          f"regret_model={float(np.mean(reg_m)):.4f}|"
+          f"regret_heuristic={float(np.mean(reg_h)):.4f}|"
+          f"acc_model={acc_m / folds:.3f}|acc_heuristic={acc_h / folds:.3f}|"
+          f"folds={len(samples)}")
+    # final model on the full dataset, persisted next to the cache file —
+    # exactly what an offline (re)train job produces
+    t_tr, model = _time_call(lambda: dm.train_and_save(
+        cache.entries(), dp.model_path_for(cache), steps=steps))
+    _emit("model.train", t_tr,
+          f"samples={model.n_samples}|candidates={len(model.candidates)}|"
+          f"sigma={model.sigma:.3f}|version={model.version}")
+    # plan-time budget: the model path (unseen bucket, floor pinned to 0
+    # so every call takes the prediction instead of writing a heuristic
+    # entry) vs the cached-plan path.  Same shape for both pairs — only
+    # the nnz bucket differs — so the comparison isolates selection cost
+    # from the shared per-plan work (operand validation, kwarg
+    # resolution).
+    A = random_sparse(80, 80, 0.03, seed=777)
+    B = random_sparse(80, 80, 0.03, seed=778)
+    conf = dp.explain(A, B, cache=cache)["model"]["confidence"]
+    art = dm.DispatchModel.load(dp.model_path_for(cache))
+    art.confidence_floor = 0.0
+    p = dp.plan(A, B, cache=cache, model=art)
+    t_model, _ = _time_call(lambda: dp.plan(A, B, cache=cache, model=art),
+                            repeat=20)
+    A0 = random_sparse(80, 80, 0.01, seed=888)
+    B0 = random_sparse(80, 80, 0.01, seed=889)
+    dp.plan(A0, B0, autotune=True, cache=cache, model=False)  # seed entry
+    t_cached, _ = _time_call(
+        lambda: dp.plan(A0, B0, cache=cache, model=False), repeat=20)
+    _emit("model.select_us", t_model,
+          f"cached_us={t_cached * 1e6:.1f}|"
+          f"select_budget_ratio={t_model / t_cached:.2f}|"
+          f"source={p.source}|confidence={conf:.3f}")
+
+
 def serve_bench(fast=False):
     """Continuous-serving section: synthetic mixed SpGEMM traffic through
     the bucketed service (serving/spgemm_service.py) on the sharded
@@ -670,7 +761,7 @@ def serve_bench(fast=False):
 ALL = {"table3": table3, "fig8": fig8, "fig9": fig9, "fig10": fig10,
        "fig11": fig11, "table4": table4, "moe": moe_bench,
        "kernels": kernels_bench, "dispatch": dispatch_bench,
-       "serve": serve_bench}
+       "model": model_bench, "serve": serve_bench}
 
 _NEEDS_MATS = ("table3", "fig8", "fig9", "fig10", "fig11", "dispatch")
 
@@ -695,7 +786,7 @@ def main() -> None:
                 fn(mats, fast=args.fast)
             else:
                 fn(mats)
-        elif name == "serve":
+        elif name in ("serve", "model"):
             fn(fast=args.fast)
         else:
             fn()

@@ -286,6 +286,27 @@ def cache_key(A: CSR, B: CSR, backend: Optional[str] = None) -> str:
 # prefix (shape keys are "<rows>x<cols>@..." strings, so no collision)
 _QUAR_PREFIX = "!quarantine:"
 
+# the cache file's schema record (same reserved "!" namespace).  v1 files
+# (no record) held winner-only selection entries and TTL-less quarantine
+# records; v2 adds per-candidate timing vectors + feature dicts on
+# autotune entries and per-combo quarantine timestamps/strike counts.
+# Old entries are MIGRATED forward on load, never dropped: a winner-only
+# v1 entry is a perfectly good v2 entry without a timing vector.
+_SCHEMA_KEY = "!schema"
+SCHEMA_VERSION = 2
+
+
+def combo_str(engine: str, backend: Optional[str]) -> str:
+    """The canonical "engine|backend" id shared by quarantine records,
+    timing vectors, and the dispatch model's candidate space ("" for a
+    backend-less engine)."""
+    return f"{engine}|{backend or ''}"
+
+
+def split_combo(combo: str) -> tuple[str, Optional[str]]:
+    engine, _, backend = combo.partition("|")
+    return engine, (backend or None)
+
 # returned by AutotuneCache._lock_file when a live holder kept the lock
 # past the bounded acquire window (distinct from None = "no locking")
 _LOCK_TIMEOUT = object()
@@ -327,7 +348,9 @@ class AutotuneCache:
     every process within one flush interval."""
 
     def __init__(self, path: Optional[str] = None, *,
-                 lock_timeout_s: Optional[float] = None):
+                 lock_timeout_s: Optional[float] = None,
+                 quarantine_ttl_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.time):
         self.path = path or os.environ.get(
             "REPRO_AUTOTUNE_CACHE",
             os.path.join(os.path.expanduser("~"), ".cache", "repro",
@@ -344,19 +367,60 @@ class AutotuneCache:
             lock_timeout_s = float(os.environ.get(
                 "REPRO_AUTOTUNE_LOCK_TIMEOUT_S", "0.5"))
         self.lock_timeout_s = lock_timeout_s
+        if quarantine_ttl_s is None:
+            quarantine_ttl_s = float(os.environ.get(
+                "REPRO_QUARANTINE_TTL_S", "3600"))
+        self.quarantine_ttl_s = quarantine_ttl_s
+        self.clock = clock
+        # (st_mtime_ns, st_size, st_ino) of the last disk state we
+        # parsed — lets refresh() skip the JSON re-parse when nothing
+        # was flushed since (the plan-miss pull runs per miss)
+        self._disk_stat: Optional[tuple] = None
+        # schema version of the file as loaded (pre-migration), for
+        # inspection tools; None until the file is first read
+        self.loaded_schema_version: Optional[int] = None
+
+    def _migrate(self, data: dict) -> dict:
+        """Normalize entries from any prior schema version in place.
+
+        Migration is strictly additive — a version bump must never
+        discard winner entries another (older) process wrote:
+          * selection entries (winner-only v1 or timing-vectored v2)
+            pass through unchanged — absent ``timings``/``features``
+            just means "no replayable measurement for this bucket";
+          * v1 quarantine records carry no per-combo timestamps; they
+            are stamped *now* so a combo poisoned before TTLs existed
+            gets one full TTL from this load instead of being poisoned
+            forever (the exact failure the TTL exists to fix)."""
+        now = float(self.clock())
+        for k, v in data.items():
+            if not k.startswith(_QUAR_PREFIX):
+                continue
+            ts = v.setdefault("ts", {})
+            for combo in v.get("combos", ()):
+                ts.setdefault(combo, now)
+        return data
 
     def _read_disk(self) -> Optional[dict]:
-        """Parse the on-disk file; {} when missing, None when corrupt."""
+        """Parse + migrate the on-disk file; {} when missing, None when
+        corrupt.  Records the file's stat identity for refresh()."""
         try:
             with open(self.path) as f:
+                st = os.fstat(f.fileno())
                 data = json.load(f)
         except FileNotFoundError:
+            self._disk_stat = None
             return {}
         except (OSError, ValueError):
             return None
         if not isinstance(data, dict):
             return None
-        return {k: v for k, v in data.items() if isinstance(v, dict)}
+        self._disk_stat = (st.st_mtime_ns, st.st_size, st.st_ino)
+        schema = data.pop(_SCHEMA_KEY, None)
+        self.loaded_schema_version = int(schema.get("version", 1)) \
+            if isinstance(schema, dict) else 1
+        return self._migrate(
+            {k: v for k, v in data.items() if isinstance(v, dict)})
 
     def _load(self) -> dict:
         if self._entries is None:
@@ -376,21 +440,67 @@ class AutotuneCache:
             return self._load().get(key)
 
     def put(self, key: str, engine: str, source: str,
-            backend: Optional[str] = None) -> None:
+            backend: Optional[str] = None, *,
+            timings: Optional[dict] = None,
+            features: Optional[dict] = None) -> None:
+        """Record a selection; autotune sweeps additionally log the FULL
+        per-candidate timing vector (``timings``: combo string ->
+        seconds) and the feature dict that drove it — the replayable
+        dataset the learned dispatch model trains on."""
         with self._mu:
-            entry = {"engine": engine, "source": source}
+            entry: dict[str, Any] = {"engine": engine, "source": source}
             if backend is not None:
                 entry["backend"] = backend
+            if timings:
+                entry["timings"] = {k: float(v) for k, v in timings.items()}
+            if features:
+                entry["features"] = {k: (float(v) if isinstance(v, float)
+                                         else int(v))
+                                     for k, v in features.items()}
             self._load()[key] = entry
             if source == "autotune":
                 self.version += 1
             self._flush()
 
+    def entries(self) -> dict:
+        """Snapshot of every record (selections + ``!quarantine:`` keys)
+        — the offline-training dataset export and the inspection surface
+        for ``tools/dump_autotune.py``."""
+        with self._mu:
+            return {k: dict(v) for k, v in self._load().items()}
+
     # -- quarantine: poisoned (engine, backend) combos per shape bucket --
 
     @staticmethod
     def _combo(engine: str, backend: Optional[str]) -> str:
-        return f"{engine}|{backend or ''}"
+        return combo_str(engine, backend)
+
+    def _quarantine_ttl(self, q: dict, combo: str) -> float:
+        """Effective TTL for a combo: the base TTL doubled per strike
+        (a combo that keeps crashing on re-probe earns exponentially
+        longer quarantines, capped at 16x) — the re-probe budget."""
+        strikes = int(q.get("strikes", {}).get(combo, 1))
+        return self.quarantine_ttl_s * min(2.0 ** (strikes - 1), 16.0)
+
+    def _quarantine_active(self, q: dict, combo: str) -> bool:
+        """Whether a combo is currently poisoned (listed and unexpired).
+
+        An expired combo is *re-admitted*: dropped from the active list
+        (its strike count survives, so a re-crash re-quarantines it for
+        longer) lazily here rather than by a sweeper.  The removal is
+        in-memory only — the next flush persists it; until then other
+        processes run their own expiry clocks."""
+        if combo not in q.get("combos", ()):
+            return False
+        ts = q.get("ts", {}).get(combo)
+        if ts is None:  # unmigrated record mid-merge: stamp, stay active
+            q.setdefault("ts", {})[combo] = float(self.clock())
+            return True
+        if float(self.clock()) - float(ts) < self._quarantine_ttl(q, combo):
+            return True
+        q["combos"] = [c for c in q["combos"] if c != combo]
+        q.get("ts", {}).pop(combo, None)
+        return False
 
     def quarantine(self, key: str, engine: str,
                    backend: Optional[str] = None,
@@ -400,7 +510,13 @@ class AutotuneCache:
         A kernel that crashes (or returns garbage) for a bucket must not
         be re-selected on the next plan: quarantined combos are skipped
         by cache hits, heuristic selection, and autotune sweeps.  With
-        ``backend=None`` the engine is poisoned for every backend."""
+        ``backend=None`` the engine is poisoned for every backend.
+
+        Poison is NOT forever: each combo carries a timestamp and the
+        quarantine expires after ``quarantine_ttl_s`` (doubled per
+        repeat offense), so a transiently-crashing combo — an OOM spike,
+        a half-installed kernel build — is re-probed instead of being
+        routed around for the life of the cache file."""
         with self._mu:
             entries = self._load()
             qk = _QUAR_PREFIX + key
@@ -408,6 +524,9 @@ class AutotuneCache:
             combo = self._combo(engine, backend)
             if combo not in q["combos"]:
                 q["combos"].append(combo)
+            q.setdefault("ts", {})[combo] = float(self.clock())
+            strikes = q.setdefault("strikes", {})
+            strikes[combo] = int(strikes.get(combo, 0)) + 1
             if reason:
                 q.setdefault("reasons", {})[combo] = reason
             # a selection entry routing to the poisoned combo is dropped
@@ -425,16 +544,17 @@ class AutotuneCache:
             q = self._load().get(_QUAR_PREFIX + key)
             if not q:
                 return False
-            combos = set(q.get("combos", ()))
-            return (self._combo(engine, backend) in combos
-                    or self._combo(engine, None) in combos)
+            return (self._quarantine_active(q, self._combo(engine, backend))
+                    or self._quarantine_active(q, self._combo(engine, None)))
 
     def quarantined(self, key: str) -> list[tuple[str, Optional[str]]]:
-        """The (engine, backend) combos quarantined for a bucket."""
+        """The (engine, backend) combos actively quarantined for a
+        bucket (expired combos are re-admitted, not listed)."""
         with self._mu:
             q = self._load().get(_QUAR_PREFIX + key, {})
             return [(c.split("|", 1)[0], c.split("|", 1)[1] or None)
-                    for c in q.get("combos", ())]
+                    for c in list(q.get("combos", ()))
+                    if self._quarantine_active(q, c)]
 
     def _lock_file(self):
         """Open + exclusively lock ``<path>.lock``.
@@ -492,12 +612,39 @@ class AutotuneCache:
                         if c not in ours["combos"]:
                             ours["combos"].append(c)
                             changed = True
+                    # timestamps merge by max (the most recent poisoning
+                    # wins the TTL clock), strike counts by max
+                    for fld in ("ts", "strikes"):
+                        theirs = v.get(fld, {})
+                        mine = ours.setdefault(fld, {})
+                        for c, val in theirs.items():
+                            if float(val) > float(mine.get(c, -math.inf)):
+                                mine[c] = val
+                                changed = True
                 continue
             if ours is None or (v.get("source") == "autotune"
                                 and ours.get("source") != "autotune"):
                 if ours != v:
                     self._entries[k] = v
                     changed = True
+            elif ours.get("source") == v.get("source"):
+                # same-rank entries: union in the dataset fields a peer
+                # recorded that we lack (its sweep logged timings, ours
+                # was a bare winner) — measurements are never discarded
+                for fld in ("timings", "features"):
+                    if fld in v and fld not in ours:
+                        ours[fld] = v[fld]
+                        changed = True
+                # ... including per-combo timing points a peer's sweep
+                # measured for candidates ours skipped (quarantine or
+                # backend availability differ across processes)
+                theirs_t = v.get("timings")
+                ours_t = ours.get("timings")
+                if theirs_t and ours_t:
+                    for c, t in theirs_t.items():
+                        if c not in ours_t:
+                            ours_t[c] = t
+                            changed = True
         for qk, q in list(self._entries.items()):
             if not qk.startswith(_QUAR_PREFIX):
                 continue
@@ -505,11 +652,10 @@ class AutotuneCache:
             sel = self._entries.get(sk)
             if sel is None:
                 continue
-            combos = set(q.get("combos", ()))
-            if (self._combo(sel.get("engine", ""), sel.get("backend"))
-                    in combos
-                    or self._combo(sel.get("engine", ""), None)
-                    in combos):
+            eng = sel.get("engine", "")
+            if (self._quarantine_active(q, self._combo(eng,
+                                                       sel.get("backend")))
+                    or self._quarantine_active(q, self._combo(eng, None))):
                 self._entries.pop(sk, None)
                 changed = True
         return changed
@@ -527,6 +673,17 @@ class AutotuneCache:
             if self._entries is None:
                 self._load()
                 return True
+            # stat short-circuit: the pull runs on EVERY plan-cache miss
+            # (model-based selection makes misses the common case for
+            # fresh buckets), so an unchanged file must cost a stat, not
+            # a JSON parse
+            try:
+                st = os.stat(self.path)
+                if self._disk_stat == (st.st_mtime_ns, st.st_size,
+                                       st.st_ino):
+                    return False
+            except OSError:
+                pass
             disk = self._read_disk()
             if not disk:
                 return False
@@ -535,11 +692,14 @@ class AutotuneCache:
                 self.version += 1
             return changed
 
-    def _flush(self) -> None:
+    def _flush(self, *, merge: bool = True) -> None:
         with self._mu:
-            self._flush_locked()
+            self._flush_locked(merge=merge)
 
-    def _flush_locked(self) -> None:
+    def _flush_locked(self, *, merge: bool = True) -> None:
+        # merge=False writes the in-memory view verbatim — maintenance
+        # rewrites (compact --drop-timings) that must NOT re-union the
+        # on-disk dataset fields they just stripped
         tmp = None
         lock = None
         try:
@@ -553,13 +713,21 @@ class AutotuneCache:
                 lock = None
                 return
             fi.fire("autotune.flush", path=self.path)
-            self._merge_from(self._read_disk() or {})
+            if merge:
+                self._merge_from(self._read_disk() or {})
             fd, tmp = tempfile.mkstemp(
                 dir=os.path.dirname(self.path) or ".",
                 prefix=os.path.basename(self.path) + ".tmp.")
+            payload = {_SCHEMA_KEY: {"version": SCHEMA_VERSION},
+                       **self._entries}
             with os.fdopen(fd, "w") as f:
-                json.dump(self._entries, f, indent=0, sort_keys=True)
+                json.dump(payload, f, indent=0, sort_keys=True)
             os.replace(tmp, self.path)
+            try:
+                st = os.stat(self.path)
+                self._disk_stat = (st.st_mtime_ns, st.st_size, st.st_ino)
+            except OSError:
+                self._disk_stat = None
         except Exception:
             # cache is an optimization; never fail the multiply over it
             # (OSError, a scribbled-on file, or an injected write fault)
@@ -580,6 +748,7 @@ class AutotuneCache:
         """Drop all entries, in memory and on disk (no merge-back)."""
         with self._mu:
             self._entries = {}
+            self._disk_stat = None
             self.version += 1
             try:
                 os.unlink(self.path)
@@ -601,6 +770,109 @@ def default_cache() -> AutotuneCache:
     return _default_cache
 
 
+# ---------------------------------------------------------------------------
+# learned cost-model selection (models/dispatch_model.py artifacts)
+# ---------------------------------------------------------------------------
+
+# the model artifact lives NEXT TO the cache file it was trained from:
+# the cache is the dataset, the model is its fitted view, and serving
+# processes that share the cache path automatically share the model
+MODEL_SUFFIX = ".model.json"
+
+
+def model_path_for(cache: AutotuneCache) -> str:
+    """Default on-disk path of the dispatch model trained from ``cache``."""
+    return cache.path + MODEL_SUFFIX
+
+
+_model_mu = threading.Lock()
+# path -> (mtime_ns, model-or-None): a retrained artifact (new mtime) is
+# picked up on the next plan without a restart; a corrupt one caches as
+# None so selection does not re-parse it per plan
+_model_memo: dict[str, tuple[int, Any]] = {}
+
+
+def _artifact_mtime_ns(path: str) -> Optional[int]:
+    try:
+        return os.stat(path).st_mtime_ns
+    except OSError:
+        return None
+
+
+def resolve_model(model, cache: AutotuneCache):
+    """Resolve plan()'s ``model`` request to a DispatchModel or None.
+
+    ``"auto"`` loads (and memoizes, keyed on file mtime) the artifact
+    next to the cache file — absent or unreadable artifacts resolve to
+    None and selection falls through to measurement/heuristics; a
+    DispatchModel instance is used as-is; False/None disables."""
+    if model in (False, None):
+        return None
+    if model != "auto":  # an explicit DispatchModel (tests, notebooks)
+        return model
+    path = model_path_for(cache)
+    mtime = _artifact_mtime_ns(path)
+    if mtime is None:
+        return None
+    with _model_mu:
+        hit = _model_memo.get(path)
+        if hit is not None and hit[0] == mtime:
+            return hit[1]
+    from repro.models import dispatch_model as dm
+    try:
+        loaded = dm.DispatchModel.load(path)
+    except Exception:
+        # a corrupt/foreign artifact must never fail a plan
+        loaded = None
+    with _model_mu:
+        _model_memo[path] = (mtime, loaded)
+    return loaded
+
+
+def _model_token(model, cache: AutotuneCache) -> Optional[tuple]:
+    """Hashable identity of the model a plan would consult — keyed into
+    the plan memo so a retrained artifact invalidates memoized plans."""
+    if model in (False, None):
+        return None
+    if model != "auto":
+        return ("obj", id(model))
+    return ("file", _artifact_mtime_ns(model_path_for(cache)))
+
+
+def _model_candidates(key: str, backend: str,
+                      cache: AutotuneCache) -> set:
+    """Combo strings ("engine|backend") legal for this request: every
+    measurable registry candidate minus quarantined combos.  A pinned
+    backend restricts backend-aware engines to it, exactly like the
+    autotune sweep's candidate list.
+
+    One ``quarantined()`` snapshot instead of per-combo
+    ``is_quarantined`` checks: this runs on the plan hot path and each
+    check is a lock round-trip."""
+    poisoned = {combo_str(e, b) for e, b in cache.quarantined(key)}
+    allowed = set()
+    for name, bk_name in _measure_candidates(backend):
+        c = combo_str(name, bk_name)
+        # an engine-wide quarantine (backend=None) poisons every backend
+        if c in poisoned or combo_str(name, None) in poisoned:
+            continue
+        allowed.add(c)
+    return allowed
+
+
+def _model_select(model, feats: dict, key: str, backend: str,
+                  cache: AutotuneCache):
+    """One model-based selection attempt; None when the model abstains
+    (no healthy candidate it knows, or a prediction failure)."""
+    if model is None:
+        return None
+    try:
+        return model.select(feats,
+                            allowed=_model_candidates(key, backend, cache))
+    except Exception:
+        return None  # a broken model must never fail a plan
+
+
 def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1,
              backend: Optional[str] = None) -> float:
     kw = {"backend": backend} if backend is not None else {}
@@ -616,6 +888,9 @@ def _measure(spec: EngineSpec, A: CSR, B: CSR, repeat: int = 1,
     return best
 
 
+_measure_cands_memo: dict[tuple, list] = {}
+
+
 def _measure_candidates(backend: str) -> list[tuple[str, Optional[str]]]:
     """(engine, backend) pairs autotune times.  With ``backend="auto"``
     the backend becomes part of the search space: every backend-aware
@@ -623,7 +898,20 @@ def _measure_candidates(backend: str) -> list[tuple[str, Optional[str]]]:
     (``kb.measurable_backends()`` — off-TPU that excludes the
     interpret-mode pallas tier), so a TPU shape bucket can settle on
     e.g. ``spz-fused/pallas`` over ``spz-fused/xla``.  A pinned backend
-    is measured as-is."""
+    is measured as-is.
+
+    Memoized on the (engine, backend) registry contents — this also
+    runs per model-assisted plan, where rebuilding the backend list
+    would be measurable overhead; registering an engine or backend
+    invalidates naturally through the fingerprint key."""
+    fp = (backend,
+          tuple((n, s.measure, s.backend_aware)
+                for n, s in _REGISTRY.items()),
+          tuple(sorted((b.name, b.measure, b.needs_tpu_for_perf)
+                       for b in kb.available_backends().values())))
+    hit = _measure_cands_memo.get(fp)
+    if hit is not None:
+        return hit
     cands: list[tuple[str, Optional[str]]] = []
     for name, spec in _REGISTRY.items():
         if not spec.measure:
@@ -635,6 +923,9 @@ def _measure_candidates(backend: str) -> list[tuple[str, Optional[str]]]:
                          for bk in kb.measurable_backends())
         else:
             cands.append((name, kb.resolve_backend(backend).name))
+    if len(_measure_cands_memo) > 32:  # registry churn: bound staleness
+        _measure_cands_memo.clear()
+    _measure_cands_memo[fp] = cands
     return cands
 
 
@@ -679,7 +970,7 @@ class ExecutionPlan:
     kwargs: tuple               # sorted (name, value) pairs, plan-resolved
     work_bucket: tuple          # (nnz bucket A, nnz bucket B) — jit-relevant
     cache_key: str              # autotune-cache key the selection used
-    source: str                 # "explicit" | "heuristic" | "cache" | "autotune"
+    source: str    # "explicit" | "heuristic" | "cache" | "autotune" | "model"
     rule: Optional[str] = None  # heuristic rule that fired (source="heuristic")
     batch: Optional[int] = None  # lane capacity (batched plans only)
     backend: Optional[str] = None  # resolved kernel backend (aware engines)
@@ -773,6 +1064,7 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
          autotune: bool = False,
          cache: Optional[AutotuneCache] = None,
          rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+         model: Any = "auto",
          **kw) -> ExecutionPlan:
     """Select an engine and resolve kwargs for ``A @ B`` without running it.
 
@@ -793,6 +1085,14 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
              Non-default ``rules`` bypass the cache entirely — a cached
              plan from other rules must not shadow the caller's table,
              nor may a custom-rule choice poison the shared cache.
+    model:   learned-selection request.  "auto" (default) consults the
+             trained dispatch model artifact next to the cache file, if
+             one exists; a DispatchModel instance uses it directly;
+             False/None disables learned selection.  The model sits
+             between cache-hit and measurement in the ladder: a
+             confident prediction plans immediately (``source="model"``)
+             at ~µs cost, a low-confidence one falls through to
+             measurement (``autotune=True``) or heuristics.
 
     Repeat plans on the *same matrix objects* (the serving steady state)
     are memoized on operand identity and skip selection entirely."""
@@ -806,7 +1106,7 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
     if engine == "auto" and use_cache and cache is default_cache():
         try:
             memo_extra = ("plan", backend, autotune, cache.version,
-                          _sorted_kwargs(kw))
+                          _model_token(model, cache), _sorted_kwargs(kw))
             hit = _plan_memo.get(A, B, memo_extra)
             if hit is not None:
                 return hit
@@ -831,37 +1131,61 @@ def plan(A: CSR, B: CSR, engine: str = "auto", *,
         if hit is not None and (hit["source"] == "autotune" or not autotune):
             selected, source = hit["engine"], "cache"
             sel_bk = hit.get("backend")
-        elif autotune:
-            timings: dict[tuple, float] = {}
-            for name, bk_name in _measure_candidates(backend):
-                if cache.is_quarantined(key, name, bk_name):
-                    continue
-                try:
-                    timings[(name, bk_name)] = _measure(
-                        get_engine(name), A, B, backend=bk_name)
-                except Exception as e:
-                    # a candidate that dies mid-sweep is quarantined and
-                    # the sweep continues — one crashing kernel must not
-                    # abort measurement of the healthy candidates
-                    cache.quarantine(key, name, bk_name,
-                                     reason=f"{type(e).__name__}: {e}")
-            if timings:
-                (selected, sel_bk), source = \
-                    min(timings, key=timings.get), "autotune"
-                cache.put(key, selected, "autotune", backend=sel_bk)
-            else:  # nothing measurable survived: heuristic fallback
-                selected, rule = choose_engine(extract_features(A, B), rules)
-                selected, _ = _dequarantine(selected, key, backend, cache)
-                source = "heuristic"
         else:
-            selected, rule = choose_engine(extract_features(A, B), rules)
-            source = "heuristic"
+            # learned-model step of the ladder: cache miss → ask the
+            # trained cost model for an argmin over predicted runtimes.
+            # A confident prediction plans right here at ~µs cost; a
+            # low-confidence one (or no artifact) falls through to
+            # measurement / heuristics exactly as before.
+            sel = None
             if use_cache:
-                remapped, was_q = _dequarantine(selected, key, backend,
+                mdl = resolve_model(model, cache)
+                sel = _model_select(mdl, extract_features(A, B), key,
+                                    backend, cache)
+                if sel is not None and not sel.confident:
+                    sel = None
+            if sel is not None:
+                selected, sel_bk, source = sel.engine, sel.backend, "model"
+            elif autotune:
+                timings: dict[tuple, float] = {}
+                for name, bk_name in _measure_candidates(backend):
+                    if cache.is_quarantined(key, name, bk_name):
+                        continue
+                    try:
+                        timings[(name, bk_name)] = _measure(
+                            get_engine(name), A, B, backend=bk_name)
+                    except Exception as e:
+                        # a candidate that dies mid-sweep is quarantined
+                        # and the sweep continues — one crashing kernel
+                        # must not abort measurement of the healthy
+                        # candidates
+                        cache.quarantine(key, name, bk_name,
+                                         reason=f"{type(e).__name__}: {e}")
+                if timings:
+                    (selected, sel_bk), source = \
+                        min(timings, key=timings.get), "autotune"
+                    # the winner is the cached plan; the full timing
+                    # vector + features are the training dataset the
+                    # dispatch model is fitted from offline
+                    cache.put(key, selected, "autotune", backend=sel_bk,
+                              timings={combo_str(n, b): t
+                                       for (n, b), t in timings.items()},
+                              features=extract_features(A, B))
+                else:  # nothing measurable survived: heuristic fallback
+                    selected, rule = choose_engine(extract_features(A, B),
+                                                   rules)
+                    selected, _ = _dequarantine(selected, key, backend,
                                                 cache)
-                if was_q:
-                    selected, rule = remapped, "quarantine-fallback"
-                cache.put(key, selected, "heuristic")
+                    source = "heuristic"
+            else:
+                selected, rule = choose_engine(extract_features(A, B), rules)
+                source = "heuristic"
+                if use_cache:
+                    remapped, was_q = _dequarantine(selected, key, backend,
+                                                    cache)
+                    if was_q:
+                        selected, rule = remapped, "quarantine-fallback"
+                    cache.put(key, selected, "heuristic")
     spec = get_engine(selected)
     resolved = _filter_kwargs(spec.fn, kw) if engine == "auto" else kw
     plan_bk, resolved = _resolve_plan_backend(spec, backend, sel_bk,
@@ -1095,6 +1419,7 @@ def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
            autotune: bool = False,
            cache: Optional[AutotuneCache] = None,
            rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+           model: Any = "auto",
            return_stats: bool = False,
            **kw):
     """Multiply two padded CSR matrices through the engine registry.
@@ -1103,14 +1428,15 @@ def spgemm(A: CSR, B: CSR, engine: str = "auto", *,
     the selection knobs (including the plan-time kernel-backend
     resolution) and :func:`execute` for the run semantics."""
     p = plan(A, B, engine, backend=backend, autotune=autotune, cache=cache,
-             rules=rules, **kw)
+             rules=rules, model=model, **kw)
     return execute(p, A, B, return_stats=return_stats)
 
 
 def explain(A: CSR, B: CSR,
             rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS, *,
             backend: str = "auto",
-            cache: Optional[AutotuneCache] = None) -> dict:
+            cache: Optional[AutotuneCache] = None,
+            model: Any = "auto") -> dict:
     """Dry-run selection: features + the rule and engine 'auto' would pick
     (ignoring any cached *engine* plan) — for benchmarks and debugging.
 
@@ -1125,6 +1451,12 @@ def explain(A: CSR, B: CSR,
         take no kernel backend.
     ``rule``
         the heuristic rule that picked the engine.
+    ``model``
+        the learned-dispatch view of the same request, when a trained
+        model resolves: predicted winner, calibrated confidence, whether
+        that clears the confidence floor (i.e. whether ``plan()`` would
+        take the prediction), per-candidate predicted costs in seconds,
+        and the artifact version.  ``None`` when no model is available.
     """
     feats = extract_features(A, B)
     engine, rule = choose_engine(feats, rules)
@@ -1135,8 +1467,17 @@ def explain(A: CSR, B: CSR,
     cached_bk = hit.get("backend") if hit else None
     plan_bk, _ = _resolve_plan_backend(get_engine(engine), backend,
                                        cached_bk, {}, strict=False)
+    mdl = resolve_model(model, cache)
+    sel = _model_select(mdl, feats, key, backend, cache)
+    model_info = None
+    if sel is not None:
+        model_info = {"engine": sel.engine, "backend": sel.backend,
+                      "confidence": sel.confidence,
+                      "confident": sel.confident,
+                      "costs": dict(sel.costs),
+                      "version": getattr(mdl, "version", None)}
     return {"engine": engine, "rule": rule, "backend": plan_bk,
-            "features": feats, "cache_key": key}
+            "features": feats, "cache_key": key, "model": model_info}
 
 
 # ---------------------------------------------------------------------------
@@ -1282,6 +1623,7 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
                  backend: str = "auto",
                  cache: Optional[AutotuneCache] = None,
                  rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                 model: Any = "auto",
                  lane_work_hint: Optional[Sequence[int]] = None,
                  **kw) -> ExecutionPlan:
     """Select a batchable engine and resolve static capacities for a batch.
@@ -1323,16 +1665,31 @@ def plan_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
             selected, source = hit["engine"], "cache"
             sel_bk = hit.get("backend")
         else:
-            selected, rule = choose_engine(
-                extract_features(A[i_heavy], B[i_heavy]), rules)
-            source = "heuristic"
+            # same model step as plan(): a confident learned prediction
+            # (on the heaviest lane's features) beats the rules table;
+            # the selection flows through _BATCH_FALLBACK below exactly
+            # like every other source
+            sel = None
             if use_cache:
-                remapped_q, was_q = _dequarantine(
-                    _BATCH_FALLBACK.get(selected, selected), key, backend,
-                    cache)
-                if was_q:
-                    selected, rule = remapped_q, "quarantine-fallback"
-                cache.put(key, selected, "heuristic")
+                mdl = resolve_model(model, cache)
+                sel = _model_select(
+                    mdl, extract_features(A[i_heavy], B[i_heavy]), key,
+                    backend, cache)
+                if sel is not None and not sel.confident:
+                    sel = None
+            if sel is not None:
+                selected, sel_bk, source = sel.engine, sel.backend, "model"
+            else:
+                selected, rule = choose_engine(
+                    extract_features(A[i_heavy], B[i_heavy]), rules)
+                source = "heuristic"
+                if use_cache:
+                    remapped_q, was_q = _dequarantine(
+                        _BATCH_FALLBACK.get(selected, selected), key,
+                        backend, cache)
+                    if was_q:
+                        selected, rule = remapped_q, "quarantine-fallback"
+                    cache.put(key, selected, "heuristic")
     remapped = _BATCH_FALLBACK.get(selected, selected)
     spec = get_engine(remapped)
     if not spec.batchable or remapped not in _BATCH_DRIVERS:
@@ -1394,12 +1751,14 @@ def execute_batched(p: ExecutionPlan, A: BatchedCSR,
 def spgemm_batched(A: BatchedCSR, B: BatchedCSR, engine: str = "auto", *,
                    cache: Optional[AutotuneCache] = None,
                    rules: Sequence[HeuristicRule] = DEFAULT_HEURISTICS,
+                   model: Any = "auto",
                    **kw) -> BatchedCSR:
     """Multiply a batch of same-shape CSR pairs under one compilation.
 
     Exactly ``execute_batched(plan_batched(A, B, ...), A, B)``; see
     those for selection and execution semantics."""
-    p = plan_batched(A, B, engine, cache=cache, rules=rules, **kw)
+    p = plan_batched(A, B, engine, cache=cache, rules=rules, model=model,
+                     **kw)
     return execute_batched(p, A, B)
 
 

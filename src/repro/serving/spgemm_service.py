@@ -142,7 +142,7 @@ class FlushRecord:
     bucket: tuple
     n_requests: int
     engine: str
-    source: str        # "cache" = selection served from the autotune cache
+    source: str        # plan selection source ("cache", "model", ...)
     reason: str        # "full" | "timeout" | "drain"
     t: float
     wall_s: float      # host wall-clock spent executing the flush
@@ -154,7 +154,10 @@ class FlushRecord:
 
     @property
     def plan_hit(self) -> bool:
-        return self.source == "cache"
+        # selection that skipped measurement AND the heuristic table:
+        # a replayed cache entry or a confident model prediction — both
+        # are the "no selection cost paid" steady state
+        return self.source in ("cache", "model")
 
     @property
     def degraded(self) -> bool:

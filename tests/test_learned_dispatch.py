@@ -1,0 +1,528 @@
+"""Learned cost-model dispatch: dataset logging, training, the model
+selection source, quarantine TTL, and cache-schema migration.
+
+Covers the selection ladder end to end — autotune sweeps log full timing
+vectors + features, the offline-trained model plans with
+``source="model"`` on unseen buckets, low confidence falls through to
+measurement/heuristics — plus the satellites: quarantine TTL/re-probe
+backoff under a fake clock, forward migration of hand-written v1 cache
+files, ``extract_features`` invariants (hypothesis, when installed),
+and the ``tools/dump_autotune.py`` maintenance CLI.
+"""
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import dispatch as dp
+from repro.core.formats import csr_from_coo, random_sparse
+from repro.models import dispatch_model as dm
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return dp.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _mats(n=32, density=0.02, seed=0):
+    return (random_sparse(n, n, density, seed=seed),
+            random_sparse(n, n, density, seed=seed + 1000))
+
+
+def _sweep(cache, sizes=(24, 48, 96), density=0.02):
+    """Populate ``cache`` with autotune sweeps (timings + features)."""
+    for i, n in enumerate(sizes):
+        A, B = _mats(n, density, seed=i)
+        dp.plan(A, B, autotune=True, cache=cache, model=False)
+
+
+def _toy_samples(n=16, seed=0):
+    """Synthetic dataset with a clean size-dependent winner crossover."""
+    rng = np.random.default_rng(seed)
+    samples = []
+    for i in range(n):
+        work = float(2 ** rng.uniform(6, 18))
+        feats = {"nnz": work / 8, "density": min(0.5, work / 1e7),
+                 "avg_work_per_row": work / 64,
+                 "avg_work_per_group": work / 8,
+                 "work_var_per_group": float(rng.uniform(0, 2)),
+                 "total_work": work}
+        samples.append({"key": f"b{i}", "features": feats, "timings": {
+            "esc|": (1e-5 + 2e-9 * work) * rng.lognormal(0, 0.03),
+            "scl-hash|": (2e-6 + 6e-8 * work) * rng.lognormal(0, 0.03),
+        }})
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# dataset logging: sweeps record timing vectors + features
+# ---------------------------------------------------------------------------
+
+def test_autotune_sweep_logs_timings_and_features(cache):
+    A, B = _mats()
+    p = dp.plan(A, B, autotune=True, cache=cache, model=False)
+    assert p.source == "autotune"
+    entry = cache.get(p.cache_key)
+    assert entry["engine"] == p.engine
+    combos = set(entry["timings"])
+    # every measurable candidate that survived is in the vector, winner
+    # included, and every timing is a positive finite float
+    assert dp.combo_str(p.engine, entry.get("backend")) in combos
+    assert len(combos) >= 3
+    assert all(t > 0 and math.isfinite(t)
+               for t in entry["timings"].values())
+    feats = entry["features"]
+    assert set(feats) == set(dm.FEATURE_NAMES)
+    # heuristic puts stay field-minimal (existing equality tests rely
+    # on the exact dict shape)
+    A2, B2 = _mats(40, 0.002, seed=9)
+    p2 = dp.plan(A2, B2, cache=cache, model=False)
+    assert cache.get(p2.cache_key) == {"engine": p2.engine,
+                                       "source": "heuristic"}
+
+
+def test_samples_from_entries_filters_reserved_and_partial(cache):
+    _sweep(cache, sizes=(24, 48))
+    A, B = _mats(64, 0.002, seed=3)
+    dp.plan(A, B, cache=cache, model=False)           # winner-only entry
+    cache.quarantine("somekey", "esc", None, reason="x")
+    samples = dm.samples_from_entries(cache.entries())
+    assert len(samples) == 2
+    for s in samples:
+        assert not s["key"].startswith("!")
+        assert s["timings"] and s["features"]
+
+
+# ---------------------------------------------------------------------------
+# model: training, selection, confidence, persistence
+# ---------------------------------------------------------------------------
+
+def test_model_learns_crossover_and_calibrates():
+    samples = _toy_samples(24)
+    m = dm.DispatchModel.train(samples, steps=250)
+    hits = 0
+    for s in samples:
+        oracle = min(s["timings"], key=s["timings"].get)
+        sel = m.select(s["features"], allowed=set(s["timings"]))
+        hits += sel.combo == oracle
+        assert 0.0 <= sel.confidence <= 1.0
+        assert set(sel.costs) == set(s["timings"])
+    assert hits >= 20  # near-oracle on a clean synthetic crossover
+
+
+def test_model_select_respects_allowed_and_abstains():
+    m = dm.DispatchModel.train(_toy_samples(12), steps=100)
+    feats = _toy_samples(1)[0]["features"]
+    only = m.select(feats, allowed={"esc|"})
+    assert only.combo == "esc|" and only.confidence == 1.0
+    # a combo the model never saw cannot be ranked: not confident
+    sel = m.select(feats, allowed={"esc|", "scl-hash|", "mystery|"})
+    assert not sel.confident
+    assert m.select(feats, allowed={"mystery|"}) is None
+    assert m.select(feats, allowed=set()) is None
+
+
+def test_model_artifact_roundtrip_and_versioning(tmp_path):
+    path = str(tmp_path / "cache.json") + dp.MODEL_SUFFIX
+    entries = {s["key"]: {"engine": "esc", "source": "autotune",
+                          "timings": s["timings"],
+                          "features": s["features"]}
+               for s in _toy_samples(10)}
+    m1 = dm.train_and_save(entries, path, steps=60)
+    assert m1.version == 1 and os.path.exists(path)
+    m2 = dm.DispatchModel.load(path)
+    np.testing.assert_allclose(m2.w, m1.w)
+    assert m2.candidates == m1.candidates
+    assert m2.sigma == pytest.approx(m1.sigma)
+    # retrain bumps the artifact version past the existing one
+    m3 = dm.train_and_save(entries, path, steps=60)
+    assert m3.version == 2
+    # artifacts from a future format refuse to load
+    blob = json.loads(open(path).read())
+    blob["format_version"] = dm.FORMAT_VERSION + 1
+    open(path, "w").write(json.dumps(blob))
+    with pytest.raises(ValueError, match="format_version"):
+        dm.DispatchModel.load(path)
+
+
+def test_train_empty_and_degenerate():
+    assert dm.DispatchModel.train([]) is None
+    # single sample / single candidate still trains and selects
+    s = _toy_samples(1)
+    s[0]["timings"] = {"esc|": 1e-4}
+    m = dm.DispatchModel.train(s, steps=30)
+    sel = m.select(s[0]["features"])
+    assert sel.engine == "esc" and sel.backend is None
+
+
+# ---------------------------------------------------------------------------
+# dispatch integration: the "model" selection source
+# ---------------------------------------------------------------------------
+
+def test_plan_uses_confident_model(cache):
+    _sweep(cache)
+    model = dm.train_and_save(cache.entries(), dp.model_path_for(cache),
+                              steps=150)
+    assert model is not None
+    model.confidence_floor = 0.0          # force the prediction through
+    A, B = _mats(64, 0.02, seed=77)       # unseen bucket
+    p = dp.plan(A, B, cache=cache, model=model)
+    assert p.source == "model"
+    assert p.engine in dp.available_engines()
+    # the model path must not write a selection entry — the bucket stays
+    # open for a real measurement later
+    assert cache.get(p.cache_key) is None
+    # executing the model-selected plan is still a correct product
+    out = dp.execute(p, A, B)
+    ref = np.asarray(A.to_dense(), np.float64) @ \
+        np.asarray(B.to_dense(), np.float64)
+    np.testing.assert_allclose(np.asarray(out.to_dense(), np.float64),
+                               ref, rtol=1e-3, atol=1e-3)
+
+
+def test_plan_low_confidence_falls_through(cache):
+    _sweep(cache)
+    model = dm.train_and_save(cache.entries(), dp.model_path_for(cache),
+                              steps=150)
+    model.confidence_floor = 1.1          # nothing can clear the floor
+    A, B = _mats(64, 0.02, seed=78)
+    p = dp.plan(A, B, cache=cache, model=model)
+    assert p.source == "heuristic"
+    # ... and with autotune=True the fallback is a measurement that
+    # feeds the dataset
+    A2, B2 = _mats(80, 0.02, seed=79)
+    p2 = dp.plan(A2, B2, autotune=True, cache=cache, model=model)
+    assert p2.source == "autotune"
+    assert cache.get(p2.cache_key)["timings"]
+
+
+def test_plan_model_auto_loads_artifact_and_cache_wins(cache):
+    _sweep(cache)
+    model = dm.train_and_save(cache.entries(), dp.model_path_for(cache),
+                              steps=150, confidence_floor=0.0)
+    A, B = _mats(64, 0.02, seed=80)
+    p = dp.plan(A, B, cache=cache)        # model="auto" default
+    assert p.source == "model"
+    # a cache hit still beats the model
+    A0, B0 = _mats(24, 0.02, seed=0)      # swept bucket
+    assert dp.plan(A0, B0, cache=cache).source == "cache"
+    # disabling the model restores the heuristic path
+    assert dp.plan(A, B, cache=cache, model=False).source == "heuristic"
+    assert model is not None
+
+
+def test_model_is_quarantine_aware(cache):
+    _sweep(cache)
+    model = dm.train_and_save(cache.entries(), dp.model_path_for(cache),
+                              steps=150, confidence_floor=0.0)
+    A, B = _mats(64, 0.02, seed=81)
+    first = dp.plan(A, B, cache=cache, model=model)
+    assert first.source == "model"
+    cache.quarantine(first.cache_key, first.engine, first.backend,
+                     reason="crash")
+    again = dp.plan(A, B, cache=cache, model=model)
+    assert (again.engine, again.backend) != (first.engine, first.backend)
+
+
+def test_plan_batched_model_source(cache):
+    from repro.core.formats import batch_csr
+    _sweep(cache)
+    dm.train_and_save(cache.entries(), dp.model_path_for(cache),
+                      steps=150, confidence_floor=0.0)
+    lanes = [random_sparse(64, 64, 0.02, seed=90 + i) for i in range(3)]
+    A = batch_csr(lanes, batch_cap=len(lanes))
+    p = dp.plan_batched(A, A, cache=cache)
+    assert p.source == "model"
+    assert p.engine in dp._BATCH_DRIVERS
+
+
+def test_explain_surfaces_model(cache):
+    _sweep(cache)
+    dm.train_and_save(cache.entries(), dp.model_path_for(cache), steps=150)
+    A, B = _mats(64, 0.02, seed=82)
+    info = dp.explain(A, B, cache=cache)
+    mi = info["model"]
+    assert mi is not None
+    assert mi["engine"] and 0.0 <= mi["confidence"] <= 1.0
+    assert isinstance(mi["confident"], bool)
+    assert all(t > 0 for t in mi["costs"].values())
+    assert mi["version"] == 1
+    # without an artifact the sub-dict is None, not an error
+    other = dp.AutotuneCache(str(os.path.dirname(cache.path))
+                             + "/other.json")
+    assert dp.explain(A, B, cache=other)["model"] is None
+
+
+def test_corrupt_artifact_never_fails_a_plan(cache):
+    _sweep(cache)
+    with open(dp.model_path_for(cache), "w") as f:
+        f.write("{not json")
+    A, B = _mats(64, 0.02, seed=83)
+    p = dp.plan(A, B, cache=cache)        # model="auto" on corrupt file
+    assert p.source in ("heuristic", "cache")
+
+
+def test_serving_plan_hit_counts_model_source():
+    from repro.serving.spgemm_service import FlushRecord
+    base = dict(bucket=(1,), n_requests=1, reason="full", t=0.0,
+                wall_s=0.0, engine="esc")
+    assert FlushRecord(source="cache", **base).plan_hit
+    assert FlushRecord(source="model", **base).plan_hit
+    assert not FlushRecord(source="heuristic", **base).plan_hit
+
+
+# ---------------------------------------------------------------------------
+# quarantine TTL / re-probe budget
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self, t=1_000_000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_quarantine_expires_after_ttl(tmp_path):
+    clk = _Clock()
+    c = dp.AutotuneCache(str(tmp_path / "c.json"), quarantine_ttl_s=100,
+                         clock=clk)
+    c.quarantine("bucket", "esc", "xla", reason="oom")
+    assert c.is_quarantined("bucket", "esc", "xla")
+    clk.t += 99
+    assert c.is_quarantined("bucket", "esc", "xla")
+    clk.t += 2   # past the TTL: re-admitted for a re-probe
+    assert not c.is_quarantined("bucket", "esc", "xla")
+    assert c.quarantined("bucket") == []
+
+
+def test_quarantine_reprobe_backoff_doubles(tmp_path):
+    clk = _Clock()
+    c = dp.AutotuneCache(str(tmp_path / "c.json"), quarantine_ttl_s=100,
+                         clock=clk)
+    c.quarantine("bucket", "esc", None)
+    clk.t += 101
+    assert not c.is_quarantined("bucket", "esc")    # first re-probe
+    c.quarantine("bucket", "esc", None)             # crashed again
+    clk.t += 101
+    assert c.is_quarantined("bucket", "esc")        # 2 strikes: TTL x2
+    clk.t += 100
+    assert not c.is_quarantined("bucket", "esc")
+    # backoff is capped at 16x the base TTL
+    for _ in range(8):
+        c.quarantine("bucket", "esc", None)
+    clk.t += 100 * 16 + 1
+    assert not c.is_quarantined("bucket", "esc")
+
+
+def test_quarantine_expiry_persists_and_merges(tmp_path):
+    clk = _Clock()
+    path = str(tmp_path / "c.json")
+    c = dp.AutotuneCache(path, quarantine_ttl_s=100, clock=clk)
+    c.quarantine("bucket", "esc", "xla")
+    c.quarantine("bucket", "scl-hash", None)
+    clk.t += 101
+    assert not c.is_quarantined("bucket", "esc", "xla")
+    c.put("other", "esc", "heuristic")   # flush persists the expiry
+    c2 = dp.AutotuneCache(path, quarantine_ttl_s=100, clock=clk)
+    assert not c2.is_quarantined("bucket", "esc", "xla")
+    assert not c2.is_quarantined("bucket", "scl-hash")
+    # strike counts survive expiry on disk so the backoff keeps history
+    raw = json.load(open(path))
+    assert raw["!quarantine:bucket"]["strikes"]["esc|xla"] == 1
+
+
+def test_plan_reprobes_expired_combo(tmp_path):
+    """End to end: a transiently-crashing winner is re-admitted to the
+    sweep after its TTL instead of being poisoned forever."""
+    clk = _Clock()
+    c = dp.AutotuneCache(str(tmp_path / "ttl.json"), quarantine_ttl_s=50,
+                         clock=clk)
+    A, B = _mats(32, 0.02, seed=5)
+    p = dp.plan(A, B, autotune=True, cache=c, model=False)
+    combo = dp.combo_str(p.engine, p.backend)
+    c.quarantine(p.cache_key, p.engine, p.backend, reason="transient")
+    p2 = dp.plan(A, B, autotune=True, cache=c, model=False)
+    assert (p2.engine, p2.backend) != (p.engine, p.backend)
+    assert combo not in c.get(p2.cache_key)["timings"]
+    # the replacement crashes too: the bucket loses its selection entry
+    c.quarantine(p2.cache_key, p2.engine, p2.backend, reason="transient")
+    clk.t += 51   # both past the TTL — re-admitted to the sweep
+    p3 = dp.plan(A, B, autotune=True, cache=c, model=False)
+    assert combo in c.get(p3.cache_key)["timings"]
+
+
+# ---------------------------------------------------------------------------
+# schema migration: v1 winner-only files survive the version bump
+# ---------------------------------------------------------------------------
+
+def test_v1_cache_file_migrates_forward(tmp_path):
+    """Hand-written old-format file: no !schema record, winner-only
+    entries, quarantine without timestamps.  Nothing may be dropped."""
+    path = str(tmp_path / "old.json")
+    v1 = {
+        "32x32@7*32x32@7|bk=auto": {"engine": "esc", "source": "autotune",
+                                    "backend": "xla"},
+        "8x8@4*8x8@4|bk=auto": {"engine": "scl-hash",
+                                "source": "heuristic"},
+        "!quarantine:32x32@7*32x32@7|bk=auto": {"combos": ["spz|xla"]},
+    }
+    json.dump(v1, open(path, "w"))
+    c = dp.AutotuneCache(path, quarantine_ttl_s=100, clock=_Clock())
+    assert c.get("32x32@7*32x32@7|bk=auto") == {
+        "engine": "esc", "source": "autotune", "backend": "xla"}
+    assert c.get("8x8@4*8x8@4|bk=auto") == {"engine": "scl-hash",
+                                            "source": "heuristic"}
+    assert c.loaded_schema_version == 1
+    # unstamped v1 quarantine combos get a full TTL from load time
+    assert c.is_quarantined("32x32@7*32x32@7|bk=auto", "spz", "xla")
+    c.put("new", "esc", "heuristic")     # flush rewrites at v2
+    raw = json.load(open(path))
+    assert raw["!schema"]["version"] == dp.SCHEMA_VERSION
+    assert raw["32x32@7*32x32@7|bk=auto"]["engine"] == "esc"
+    assert "ts" in raw["!quarantine:32x32@7*32x32@7|bk=auto"]
+    # and a fresh reader sees everything
+    c2 = dp.AutotuneCache(path)
+    assert c2.get("8x8@4*8x8@4|bk=auto")["engine"] == "scl-hash"
+    assert c2.loaded_schema_version == dp.SCHEMA_VERSION
+
+
+def test_merge_preserves_v1_entries_from_disk(tmp_path):
+    """A v2 process flushing over a file an old (v1) process wrote must
+    merge the old winner entries, not discard them."""
+    path = str(tmp_path / "shared.json")
+    c = dp.AutotuneCache(path)
+    c.put("mine", "esc", "autotune", backend="xla",
+          timings={"esc|xla": 1e-4}, features={"nnz": 10})
+    # an old process rewrites the file without schema/timings
+    json.dump({"theirs": {"engine": "spz", "source": "autotune"}},
+              open(path, "w"))
+    c.put("mine2", "scl-hash", "heuristic")   # triggers read-merge-write
+    raw = json.load(open(path))
+    assert raw["theirs"] == {"engine": "spz", "source": "autotune"}
+    assert raw["mine"]["timings"] == {"esc|xla": 1e-4}
+    assert raw["!schema"]["version"] == dp.SCHEMA_VERSION
+
+
+def test_merge_unions_timing_vectors(tmp_path):
+    """Two processes sweeping the same bucket with different healthy
+    candidates: the flush merge unions their timing vectors instead of
+    letting the last writer win."""
+    path = str(tmp_path / "shared.json")
+    a = dp.AutotuneCache(path)
+    b = dp.AutotuneCache(path)
+    a.put("k", "esc", "autotune", timings={"esc|": 1e-4},
+          features={"nnz": 10})
+    b.put("k", "esc", "autotune", timings={"esc|": 2e-4, "spz|xla": 5e-4},
+          features={"nnz": 10})
+    a.refresh()
+    merged = a.get("k")["timings"]
+    assert set(merged) == {"esc|", "spz|xla"}
+
+
+# ---------------------------------------------------------------------------
+# extract_features invariants
+# ---------------------------------------------------------------------------
+
+def _feat_invariants(A, B):
+    f1 = dp.extract_features(A, B)
+    assert set(f1) == set(dm.FEATURE_NAMES)
+    assert all(math.isfinite(float(v)) for v in f1.values())
+    # deterministic across calls (memoized and recomputed paths agree)
+    assert dp.extract_features(A, B) == f1
+    dp.clear_feature_cache()
+    assert dp.extract_features(A, B) == f1
+    # stable across duplicate CSR wrappers over the SAME buffers: the
+    # _OperandMemo keys on buffer identity, a fresh wrapper re-computes
+    from repro.core.formats import CSR
+    A2 = CSR(A.indptr, A.indices, A.data, A.shape)
+    assert dp.extract_features(A2, B) == f1
+    # mutating a copy's structure changes features through the memo too
+    assert all(dm.featurize(f1)[i] is not None
+               for i in range(len(dm.FEATURE_NAMES)))
+
+
+def test_features_empty_and_single_row():
+    empty = csr_from_coo([], [], [], (8, 8))
+    _feat_invariants(empty, empty)
+    assert dp.extract_features(empty, empty)["nnz"] == 0
+    one = csr_from_coo([0, 0], [1, 3], [1.0, 2.0], (1, 8))
+    other = random_sparse(8, 8, 0.1, seed=1)
+    _feat_invariants(one, other)
+    assert dp.extract_features(one, other)["nnz"] == 2
+
+
+def test_features_regular_matrix():
+    A = random_sparse(32, 32, 0.05, seed=3)
+    B = random_sparse(32, 32, 0.05, seed=4)
+    _feat_invariants(A, B)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def any_matrix(draw):
+        n = draw(st.integers(1, 40))
+        m = draw(st.integers(1, 40))
+        density = draw(st.sampled_from([0.0, 0.01, 0.05, 0.2]))
+        if density == 0.0:
+            return csr_from_coo([], [], [], (n, m))
+        seed = draw(st.integers(0, 10_000))
+        return random_sparse(n, m, density, seed=seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(any_matrix(), any_matrix())
+    def test_prop_extract_features_invariants(A, B):
+        if A.n_cols != B.n_rows:
+            B = random_sparse(A.n_cols, max(B.n_cols, 1), 0.05, seed=0)
+        _feat_invariants(A, B)
+        z = dm.featurize(dp.extract_features(A, B))
+        assert all(math.isfinite(v) for v in z)
+
+
+# ---------------------------------------------------------------------------
+# tools/dump_autotune.py smoke
+# ---------------------------------------------------------------------------
+
+def test_dump_autotune_cli(tmp_path, capsys):
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "tools"))
+    try:
+        import dump_autotune as da
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "cache.json")
+    c = dp.AutotuneCache(path)
+    _sweep(c, sizes=(24, 48))
+    c.quarantine("bad-bucket", "esc", "xla", reason="boom")
+    assert da.main(["dump_autotune", "show", path]) == 0
+    out = capsys.readouterr().out
+    assert "schema v2" in out and "quarantined" in out
+    assert da.main(["dump_autotune", "validate", path]) == 0
+    export = str(tmp_path / "ds.json")
+    assert da.main(["dump_autotune", "export", path,
+                    "--output", export]) == 0
+    ds = json.load(open(export))
+    assert ds["n_samples"] == 2
+    assert ds["feature_names"] == list(dm.FEATURE_NAMES)
+    assert da.main(["dump_autotune", "train", path, "--steps", "40"]) == 0
+    assert os.path.exists(path + dp.MODEL_SUFFIX)
+    assert da.main(["dump_autotune", "compact", path,
+                    "--drop-timings"]) == 0
+    raw = json.load(open(path))
+    assert all("timings" not in e for k, e in raw.items()
+               if not k.startswith("!"))
+    # validate flags a malformed file
+    json.dump({"k": {"source": "autotune",
+                     "timings": {"esc|": float("1e300") * 0 + 1.0}},
+               "!quarantine:q": {"combos": "notalist"}},
+              open(path, "w"))
+    assert da.main(["dump_autotune", "validate", path]) == 1
